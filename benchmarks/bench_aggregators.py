@@ -1,0 +1,24 @@
+"""Paper Fig 6: write throughput vs number of aggregators (N ranks -> M
+subfiles) — the interior-optimum curve (peak at a few aggregators per node,
+decline at extreme aggregation)."""
+from __future__ import annotations
+
+from benchmarks.common import GiB, Timer, emit, tmp_io_dir
+from benchmarks.bench_openpmd_io import write_steps
+from repro.core.bp_engine import EngineConfig
+from repro.core.darshan import MONITOR
+
+
+def run(n_ranks=128, bytes_per_rank=256 * 1024, steps=2,
+        agg_counts=(1, 2, 4, 8, 16, 32, 64, 128), workers=4):
+    for m in agg_counts:
+        MONITOR.reset()
+        cfg = EngineConfig(aggregators=m, codec="none", workers=workers)
+        with tmp_io_dir() as d, Timer() as t:
+            total = write_steps(d, n_ranks, bytes_per_rank, steps, cfg)
+        emit(f"aggregators/M={m}", t.dt * 1e6 / steps,
+             f"{total / t.dt / GiB:.3f}GiB/s files={m}")
+
+
+if __name__ == "__main__":
+    run()

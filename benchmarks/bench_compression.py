@@ -1,0 +1,26 @@
+"""Paper Fig 7/8 + Table II: codecs (none / blosc / bzip2) x aggregation —
+throughput, stored bytes, file counts and sizes."""
+from __future__ import annotations
+
+from benchmarks.common import GiB, MiB, Timer, emit, tmp_io_dir
+from benchmarks.bench_openpmd_io import write_steps
+from repro.core.bp_engine import BpReader, EngineConfig
+from repro.core.darshan import MONITOR
+
+
+def run(n_ranks=64, bytes_per_rank=512 * 1024, steps=2, workers=4):
+    for codec in ("none", "blosc", "bzip2", "zlib"):
+        MONITOR.reset()
+        cfg = EngineConfig(aggregators=1, codec=codec, workers=workers)
+        with tmp_io_dir() as d, Timer() as t:
+            total = write_steps(d, n_ranks, bytes_per_rank, steps, cfg)
+            stored = MONITOR.report()["total"]["POSIX_BYTES_WRITTEN"]
+            files = sorted((d / "sim.bp4").glob("data.*"))
+            sizes = [f.stat().st_size for f in files]
+        emit(f"compression/{codec}+1AGGR", t.dt * 1e6 / steps,
+             f"{total / t.dt / GiB:.3f}GiB/s ratio={total / max(stored, 1):.2f} "
+             f"files={len(files)} max={max(sizes) / MiB:.2f}MiB")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig 4 / Table I: IOR-like synthetic upper bounds.
+
+FilePerProc (-F): every rank streams large sequential blocks to its own
+file. Shared: all ranks write disjoint offsets of one file. Both via the
+writer thread pool (the 'parallel procs' of this container)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GiB, Timer, emit, tmp_io_dir
+from repro.core.aggregation import WriterPool
+from repro.core.darshan import MONITOR, open_file
+
+
+def run(n_ranks=32, block=1 * 1024 * 1024, blocks_per_rank=8, workers=4):
+    payloads = [np.random.default_rng(r).bytes(block)
+                for r in range(min(n_ranks, 8))]
+
+    # --- FilePerProc ---------------------------------------------------------
+    MONITOR.reset()
+    with tmp_io_dir() as d, Timer() as t:
+        pool = WriterPool(workers)
+
+        def per_proc(r):
+            with open_file(d / f"ior_{r}.dat", "wb", rank=r) as f:
+                for b in range(blocks_per_rank):
+                    f.write(payloads[r % len(payloads)])
+                f.fsync()
+
+        for r in range(n_ranks):
+            pool.submit(per_proc, r)
+        pool.shutdown()
+    total = n_ranks * blocks_per_rank * block
+    emit(f"ior/file_per_proc ranks={n_ranks}", t.dt * 1e6 / n_ranks,
+         f"{total / t.dt / GiB:.3f}GiB/s")
+
+    # --- Shared file -----------------------------------------------------------
+    MONITOR.reset()
+    with tmp_io_dir() as d, Timer() as t:
+        f = open_file(d / "ior_shared.dat", "wb", rank=0)
+        import threading
+        lock = threading.Lock()
+        pool = WriterPool(workers)
+
+        def shared(r):
+            data = payloads[r % len(payloads)]
+            for b in range(blocks_per_rank):
+                off = (r * blocks_per_rank + b) * block
+                with lock:
+                    f.seek(off)
+                    f.write(data)
+
+        for r in range(n_ranks):
+            pool.submit(shared, r)
+        pool.shutdown()
+        f.fsync()
+        f.close()
+    emit(f"ior/shared ranks={n_ranks}", t.dt * 1e6 / n_ranks,
+         f"{total / t.dt / GiB:.3f}GiB/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig 3/4: openPMD + JBP(BP4) write throughput vs rank count —
+the headline comparison against Original I/O."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GiB, MiB, Timer, emit, pic_payload, tmp_io_dir
+from repro.core.bp_engine import BpWriter, EngineConfig
+from repro.core.darshan import MONITOR
+
+
+def write_steps(d, n_ranks, bytes_per_rank, steps, cfg):
+    w = BpWriter(d / "sim.bp4", n_ranks, cfg)
+    total = 0
+    for s in range(steps):
+        w.begin_step(s)
+        for r in range(n_ranks):
+            arr = pic_payload(r, bytes_per_rank)["particles"]
+            total += arr.nbytes
+            w.put("particles/x", arr, global_shape=(arr.size * n_ranks,),
+                  offset=(arr.size * r,), rank=r)
+        w.end_step()
+    w.close()
+    return total
+
+
+def run(rank_counts=(4, 16, 64, 256), bytes_per_rank=256 * 1024, steps=3,
+        aggregators=4, workers=4):
+    for n_ranks in rank_counts:
+        MONITOR.reset()
+        cfg = EngineConfig(aggregators=min(aggregators, n_ranks),
+                           codec="none", workers=workers)
+        with tmp_io_dir() as d, Timer() as t:
+            total = write_steps(d, n_ranks, bytes_per_rank, steps, cfg)
+            nfiles = MONITOR.total_files_written()
+        thr = total / t.dt / GiB
+        emit(f"openpmd_bp4/ranks={n_ranks}", t.dt * 1e6 / (steps * n_ranks),
+             f"{thr:.3f}GiB/s files={nfiles} "
+             f"avg={total/max(nfiles,1)/MiB:.2f}MiB")
+
+
+if __name__ == "__main__":
+    run()

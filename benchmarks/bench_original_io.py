@@ -1,0 +1,33 @@
+"""Paper Fig 2/3 + Table II (baseline): BIT1 Original file-per-rank I/O.
+
+Write throughput vs rank count for the pre-openPMD path: one small text .dat
+per rank per diagnostic + one binary .dmp per rank per checkpoint. Shows the
+metadata-dominated scaling collapse the paper measures."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GiB, MiB, Timer, emit, pic_payload, tmp_io_dir
+from repro.core.darshan import MONITOR
+from repro.core.original_io import write_dat, write_dmp
+
+
+def run(rank_counts=(4, 16, 64, 256), bytes_per_rank=256 * 1024, dumps=3):
+    for n_ranks in rank_counts:
+        MONITOR.reset()
+        with tmp_io_dir() as d, Timer() as t:
+            for step in range(dumps):
+                for r in range(n_ranks):
+                    arrs = pic_payload(r, bytes_per_rank)
+                    write_dat(d, r, step, {k: v[:512] for k, v in arrs.items()})
+                    write_dmp(d, r, step, arrs)
+            nfiles = MONITOR.total_files_written()
+            nbytes = MONITOR.report()["total"]["POSIX_BYTES_WRITTEN"]
+        thr = nbytes / t.dt / GiB
+        emit(f"original_io/ranks={n_ranks}", t.dt * 1e6 / (dumps * n_ranks),
+             f"{thr:.3f}GiB/s files={nfiles} "
+             f"avg={nbytes/max(nfiles,1)/MiB:.3f}MiB")
+
+
+if __name__ == "__main__":
+    run()

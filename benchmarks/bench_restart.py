@@ -1,0 +1,53 @@
+"""Restart-path benchmark (the paper's §VI checkpoint-restart direction +
+our elastic extension): checkpoint write, full restore, and elastic
+slice-restore cost vs aggregator count. Confirms the paper's observation
+that 'checkpoints read very little data' — the read path touches only the
+boxes each shard needs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import GiB, emit, tmp_io_dir
+from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.bp_engine import BpReader, EngineConfig
+from repro.core.darshan import MONITOR
+
+
+def run(n_leaves=16, leaf_shape=(1024, 512), aggregators=(1, 4)):
+    state = {f"w{i:02d}": np.random.default_rng(i).normal(
+        size=leaf_shape).astype(np.float32) for i in range(n_leaves)}
+    total = sum(a.nbytes for a in state.values())
+
+    for m in aggregators:
+        cfg = EngineConfig(aggregators=m, codec="blosc", workers=4)
+        with tmp_io_dir() as d:
+            t0 = time.perf_counter()
+            save_checkpoint(d, state, 1, n_io_ranks=16, engine_config=cfg)
+            t_write = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            back, _ = restore_checkpoint(d, state)
+            t_read = time.perf_counter() - t0
+            assert np.allclose(back["w00"], state["w00"])
+
+            # elastic slice: one shard of a hypothetical 8-way resharding
+            MONITOR.reset()
+            t0 = time.perf_counter()
+            reader = BpReader(d / "step_00000001.bp4")
+            sl = reader.read_var(1, "state/w00", offset=(0, 0),
+                                 extent=(leaf_shape[0] // 8, leaf_shape[1]))
+            t_slice = time.perf_counter() - t0
+            bytes_read = MONITOR.report()["total"]["POSIX_BYTES_READ"]
+        emit(f"restart/M={m} write", t_write * 1e6,
+             f"{total / t_write / GiB:.3f}GiB/s")
+        emit(f"restart/M={m} full_read", t_read * 1e6,
+             f"{total / t_read / GiB:.3f}GiB/s")
+        emit(f"restart/M={m} elastic_slice", t_slice * 1e6,
+             f"read {bytes_read / 2**20:.2f}MiB of {total / 2**20:.0f}MiB")
+
+
+if __name__ == "__main__":
+    run()

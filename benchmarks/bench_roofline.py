@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (benchmarks/results/dryrun/)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def run():
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") == "skipped":
+            emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}", 0.0, "skipped")
+            continue
+        if d.get("status") != "ok":
+            emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}", 0.0,
+                 f"ERROR {d.get('error', '')[:60]}")
+            continue
+        r = d["roofline"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}", step_s * 1e6,
+             f"dom={r['dominant']} comp={r['compute_s']*1e3:.1f}ms "
+             f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+             f"useful={r['useful_flops_ratio']:.3f} mfu_bound={r['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

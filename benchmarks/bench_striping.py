@@ -1,0 +1,26 @@
+"""Paper Fig 9 + Table III: Lustre stripe count x stripe size sweep (write
+time of the blosc+1AGGR configuration over emulated OSTs)."""
+from __future__ import annotations
+
+from benchmarks.common import MiB, Timer, emit, tmp_io_dir
+from benchmarks.bench_openpmd_io import write_steps
+from repro.core.bp_engine import EngineConfig
+from repro.core.darshan import MONITOR
+from repro.core.striping import StripeConfig
+
+
+def run(n_ranks=64, bytes_per_rank=512 * 1024, steps=2, workers=4,
+        counts=(1, 2, 4, 8), sizes=(64 * 1024, 256 * 1024, 1 * MiB, 4 * MiB)):
+    for c in counts:
+        for s in sizes:
+            MONITOR.reset()
+            cfg = EngineConfig(aggregators=1, codec="blosc", workers=workers,
+                               stripe=StripeConfig(c, s), n_osts=max(counts))
+            with tmp_io_dir() as d, Timer() as t:
+                write_steps(d, n_ranks, bytes_per_rank, steps, cfg)
+            emit(f"striping/count={c}/size={s // 1024}K", t.dt * 1e6 / steps,
+                 f"write_time={t.dt:.4f}s")
+
+
+if __name__ == "__main__":
+    run()

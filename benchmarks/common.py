@@ -1,0 +1,48 @@
+"""Shared benchmark harness: synthetic PIC-like payloads, timing, CSV."""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import tempfile
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+GiB = 1024 ** 3
+MiB = 1024 ** 2
+
+
+def pic_payload(rank: int, nbytes: int) -> dict[str, np.ndarray]:
+    """Per-rank diagnostic-like arrays (smooth floats — compressible like
+    real particle/field data, unlike pure noise)."""
+    n = nbytes // 4
+    rng = np.random.default_rng(rank)
+    base = np.cumsum(rng.normal(scale=1e-3, size=n).astype(np.float32))
+    return {"particles": base}
+
+
+@contextmanager
+def tmp_io_dir():
+    d = pathlib.Path(tempfile.mkdtemp(prefix="repro-bench-", dir="/tmp"))
+    try:
+        yield d
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Emit the EXPERIMENTS.md §Roofline markdown table from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    cells = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    archs = sorted({k[0] for k in cells})
+    print("| arch | shape | mesh | dom | compute_s | memory_s | collective_s "
+          "| useful | mfu_bound | args+temp GiB | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPES:
+            for m in ("single", "multi"):
+                d = cells.get((a, s, m))
+                if d is None:
+                    continue
+                if d["status"] == "skipped":
+                    if m == "single":
+                        print(f"| {a} | {s} | both | — | — | — | — | — | — | — "
+                              f"| skip (full attention @500k) |")
+                    continue
+                if d["status"] != "ok":
+                    print(f"| {a} | {s} | {m} | ERROR | | | | | | | |")
+                    continue
+                r = d["roofline"]
+                mem = d["memory_analysis"]
+                gib = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+                print(f"| {a} | {s} | {m} | {r['dominant'][:4]} "
+                      f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                      f"| {r['collective_s']:.3f} | {r['useful_flops_ratio']:.3f} "
+                      f"| {r['mfu_bound']:.4f} | {gib:.1f} "
+                      f"| {'Y' if gib <= 16 else 'N'} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Emits ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module name")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller rank counts / payloads")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_aggregators, bench_compression,
+                            bench_darshan_costs, bench_ior, bench_kernels,
+                            bench_openpmd_io, bench_original_io,
+                            bench_perf_io, bench_restart, bench_roofline,
+                            bench_striping)
+
+    quick = args.quick
+    sections = [
+        ("original_io", lambda: bench_original_io.run(
+            rank_counts=(4, 16, 64) if quick else (4, 16, 64, 256))),
+        ("openpmd_io", lambda: bench_openpmd_io.run(
+            rank_counts=(4, 16, 64) if quick else (4, 16, 64, 256))),
+        ("ior", lambda: bench_ior.run(n_ranks=8 if quick else 32)),
+        ("darshan_costs", lambda: bench_darshan_costs.run(
+            n_ranks=16 if quick else 256, dumps=3 if quick else 5)),
+        ("aggregators", lambda: bench_aggregators.run(
+            n_ranks=32 if quick else 128,
+            agg_counts=(1, 4, 16, 32) if quick else (1, 2, 4, 8, 16, 32, 64, 128))),
+        ("compression", lambda: bench_compression.run(
+            n_ranks=16 if quick else 64)),
+        ("striping", lambda: bench_striping.run(
+            n_ranks=16 if quick else 64,
+            counts=(1, 4) if quick else (1, 2, 4, 8))),
+        ("kernels", bench_kernels.run),
+        ("perf_io", bench_perf_io.run),
+        ("restart", bench_restart.run),
+        ("roofline", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:   # noqa: BLE001 — keep the suite running
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Training-state checkpoint/restore through the JBP (openPMD/BP4) engine.
+
+The checkpoint is one openPMD-style step whose variables are the flattened
+TrainState leaves ("params/stack/layers/attn/wq/w", ...). Each leaf is
+written as chunks by logical I/O rank — from real jax.Array shards when the
+array is sharded, else by row-split — so N ranks -> M aggregator subfiles
+exactly as the paper's BIT1 checkpoints (.dmp) map onto BP4.
+
+Restore supports ELASTIC RE-SHARDING: `restore_sharded` reads, per device of
+the *new* mesh, exactly the box that shard needs (BpReader box selection),
+so a job restarted at a different scale never reads the full state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+
+SEP = "/"
+
+
+def _to_storage(arr: np.ndarray) -> np.ndarray:
+    """bfloat16 (ml_dtypes) round-trips through raw uint16 storage."""
+    if arr.dtype.itemsize == 2 and "bfloat16" in str(arr.dtype):
+        return arr.view(np.uint16)
+    return arr
+
+
+def _from_storage(arr: np.ndarray, target_dtype) -> np.ndarray:
+    if arr.dtype == np.uint16 and "bfloat16" in str(np.dtype(target_dtype)):
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr.astype(target_dtype)
+
+
+def flatten_state(state) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        name = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[name] = leaf
+    return flat
+
+
+def _leaf_chunks(arr: np.ndarray, n_ranks: int):
+    """(rank, offset, chunk) row-split of a host array (scalars -> [1])."""
+    if arr.ndim == 0:
+        yield 0, (0,), arr.reshape(1)
+        return
+    n = min(n_ranks, arr.shape[0]) or 1
+    bounds = np.linspace(0, arr.shape[0], n + 1).astype(int)
+    for r in range(n):
+        lo, hi = int(bounds[r]), int(bounds[r + 1])
+        if hi > lo:
+            yield r, (lo,) + (0,) * (arr.ndim - 1), arr[lo:hi]
+
+
+def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
+                    engine_config: EngineConfig = EngineConfig(),
+                    extra_attrs: Optional[dict] = None) -> pathlib.Path:
+    """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename)."""
+    directory = pathlib.Path(str(directory))
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}.bp4"
+    tmp = directory / f"step_{step:08d}.bp4.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+
+    flat = flatten_state(state)
+    import dataclasses as _dc
+    w = BpWriter(tmp, n_io_ranks,
+                 _dc.replace(engine_config, fsync_policy="step"))
+    w.begin_step(step)
+    w.set_attribute("checkpoint/step", step)
+    w.set_attribute("checkpoint/n_leaves", len(flat))
+    for k, v in (extra_attrs or {}).items():
+        w.set_attribute(k, v)
+    for name, leaf in flat.items():
+        if hasattr(leaf, "addressable_shards") and len(leaf.addressable_shards) > 1:
+            gshape = tuple(leaf.shape)
+            for sh in leaf.addressable_shards:
+                off = tuple(sl.start or 0 for sl in sh.index) if sh.index else ()
+                w.put(f"state/{name}", _to_storage(np.asarray(sh.data)),
+                      global_shape=gshape, offset=off, rank=sh.device.id)
+        else:
+            host = _to_storage(np.asarray(jax.device_get(leaf)))
+            gshape = host.shape if host.ndim else (1,)
+            for r, off, chunk in _leaf_chunks(host, n_io_ranks):
+                w.put(f"state/{name}", chunk, global_shape=gshape,
+                      offset=off, rank=r)
+    prof = w.end_step()
+    w.close()
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    (directory / "latest.txt").write_text(str(step))
+    return final
+
+
+def list_checkpoints(directory) -> list[int]:
+    directory = pathlib.Path(str(directory))
+    out = []
+    for p in sorted(directory.glob("step_*.bp4")):
+        try:
+            reader = BpReader(p)
+            steps = reader.valid_steps()
+            if steps:
+                out.append(int(p.name[5:13]))
+        except Exception:       # noqa: BLE001 — corrupt checkpoint: skip
+            continue
+    return sorted(out)
+
+
+def checkpoint_path(directory, step: int) -> pathlib.Path:
+    return pathlib.Path(str(directory)) / f"step_{step:08d}.bp4"
+
+
+def restore_checkpoint(directory, like, step: Optional[int] = None):
+    """Restore into the structure of `like` (pytree of arrays or
+    ShapeDtypeStructs). Full-array read (single-host path)."""
+    directory = pathlib.Path(str(directory))
+    steps = list_checkpoints(directory)
+    if not steps:
+        raise FileNotFoundError(f"no valid checkpoints under {directory}")
+    step = step if step is not None else steps[-1]
+    reader = BpReader(checkpoint_path(directory, step))
+    flat = flatten_state(like)
+    out = {}
+    for name, leaf in flat.items():
+        arr = reader.read_var(step, f"state/{name}")
+        out[name] = _from_storage(arr, leaf.dtype).reshape(leaf.shape)
+    return unflatten_like(like, out), step
+
+
+def restore_sharded(directory, like, shardings, step: Optional[int] = None):
+    """Elastic restore: `like` + `shardings` describe the NEW mesh layout;
+    every device shard reads exactly its box from the chunk table."""
+    directory = pathlib.Path(str(directory))
+    steps = list_checkpoints(directory)
+    if not steps:
+        raise FileNotFoundError(f"no valid checkpoints under {directory}")
+    step = step if step is not None else steps[-1]
+    reader = BpReader(checkpoint_path(directory, step))
+    flat_like = flatten_state(like)
+    flat_sh = flatten_state(shardings)
+    out = {}
+    for name, leaf in flat_like.items():
+        sh = flat_sh[name]
+        var = f"state/{name}"
+
+        def fetch(idx, _var=var, _leaf=leaf):
+            off = tuple((sl.start or 0) for sl in idx)
+            ext = tuple((sl.stop if sl.stop is not None else s) -
+                        (sl.start or 0) for sl, s in zip(idx, _leaf.shape))
+            a = reader.read_var(step, _var, off, ext)
+            return _from_storage(a, _leaf.dtype)
+
+        if leaf.ndim == 0:
+            arr = _from_storage(reader.read_var(step, var),
+                                leaf.dtype).reshape(())
+            out[name] = jax.device_put(arr, sh)
+        else:
+            out[name] = jax.make_array_from_callback(leaf.shape, sh, fetch)
+    return unflatten_like(like, out), step
+
+
+def unflatten_like(like, flat: dict):
+    treedef = jax.tree_util.tree_structure(like)
+    paths = [SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+             for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    return jax.tree_util.tree_unflatten(treedef, [flat[p] for p in paths])

@@ -1,0 +1,99 @@
+"""CheckpointManager: async double-buffered writes, retention, auto-restart.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * training never blocks on storage — save() snapshots the state to host
+    (device->host copy) and hands it to a writer thread,
+  * a checkpoint becomes visible only after its atomic rename; a crash
+    mid-write leaves a .tmp the next run ignores,
+  * restore_latest() walks checkpoints newest-first and returns the first
+    one whose md.idx validates (torn/corrupt ones are skipped),
+  * keep_n retention deletes old checkpoints only AFTER a newer one is
+    durable.
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as CK
+from repro.core.bp_engine import EngineConfig
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, every: int = 100, keep_n: int = 3,
+                 n_io_ranks: int = 8,
+                 engine_config: EngineConfig = EngineConfig(),
+                 async_write: bool = True):
+        self.dir = pathlib.Path(str(directory))
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.every = every
+        self.keep_n = keep_n
+        self.n_io_ranks = n_io_ranks
+        self.engine_config = engine_config
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: list[int] = []
+
+    # ----------------------------------------------------------------- save
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, state, step: int, *, force: bool = False):
+        if not force and not self.should_save(step):
+            return False
+        self.wait()                                  # one write in flight max
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def job():
+            try:
+                CK.save_checkpoint(self.dir, host_state, step,
+                                   n_io_ranks=self.n_io_ranks,
+                                   engine_config=self.engine_config)
+                self.saved_steps.append(step)
+                self._retain()
+            except BaseException as e:               # noqa: BLE001
+                self._error = e
+
+        if self.async_write:
+            self._thread = threading.Thread(target=job, daemon=True)
+            self._thread.start()
+        else:
+            job()
+        return True
+
+    def _retain(self):
+        steps = CK.list_checkpoints(self.dir)
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(CK.checkpoint_path(self.dir, s), ignore_errors=True)
+        for tmp in self.dir.glob("*.bp4.tmp"):       # torn writes
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def restore_latest(self, like, shardings=None):
+        """Newest valid checkpoint, or None if there is none."""
+        self.wait()
+        steps = CK.list_checkpoints(self.dir)
+        for step in reversed(steps):
+            try:
+                if shardings is not None:
+                    return CK.restore_sharded(self.dir, like, shardings,
+                                              step=step)
+                return CK.restore_checkpoint(self.dir, like, step=step)
+            except Exception:                        # noqa: BLE001
+                continue
+        return None

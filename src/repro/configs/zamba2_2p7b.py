@@ -1,0 +1,18 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention block. [arXiv:2411.15242; hf]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_conv=4,
+    shared_attn_interval=6,     # shared transformer block applied every 6 layers
+))

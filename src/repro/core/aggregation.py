@@ -1,0 +1,108 @@
+"""Two-level write aggregation (paper §IV-C).
+
+N writer ranks are assigned to M aggregators (`OPENPMD_ADIOS2_BP5_NumAgg`
+analogue). Each aggregator owns one `data.<m>` subfile; its ranks' chunk
+payloads are concatenated into that subfile. A work-stealing thread pool
+drains the aggregator queues — slow aggregators (straggler OSTs, big
+payloads) are absorbed by idle workers, which is the straggler-mitigation
+story for 1000+-node deployments (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Optional
+
+from repro.core.darshan import open_file
+from repro.core.striping import OstPool, StripeConfig, StripedFile
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorConfig:
+    num_aggregators: int = 1
+    num_workers: int = 4                      # writer threads (work-stealing)
+    stripe: Optional[StripeConfig] = None     # stripe each subfile if set
+
+
+def aggregator_of(rank: int, n_ranks: int, m: int) -> int:
+    """Contiguous block assignment: rank -> aggregator (ADIOS2 default)."""
+    m = min(m, n_ranks)
+    return rank * m // n_ranks
+
+
+class SubfileSet:
+    """The M open data.<m> subfiles of one step/series (striped or plain)."""
+
+    def __init__(self, dirpath, m: int, *, stripe: Optional[StripeConfig] = None,
+                 ost_pool: Optional[OstPool] = None):
+        self.dirpath = dirpath
+        self.m = m
+        self._offsets = [0] * m
+        self._locks = [threading.Lock() for _ in range(m)]
+        self._files = []
+        for i in range(m):
+            if stripe is not None and ost_pool is not None:
+                self._files.append(StripedFile(ost_pool, f"data.{i}", stripe,
+                                               rank=i))
+            else:
+                self._files.append(open_file(dirpath / f"data.{i}", "wb",
+                                             rank=i))
+
+    def append(self, agg_id: int, payload: bytes) -> int:
+        """Thread-safe append; returns the subfile offset written at.
+        Appends are sequential per subfile — no seek() is ever needed (the
+        log-structured layout is exactly why BP4 avoids metadata ops)."""
+        with self._locks[agg_id]:
+            off = self._offsets[agg_id]
+            f = self._files[agg_id]
+            if isinstance(f, StripedFile):
+                f.write(payload, offset=off)
+            else:
+                f.write(payload)
+            self._offsets[agg_id] = off + len(payload)
+            return off
+
+    def fsync_close(self):
+        for f in self._files:
+            f.fsync()
+            f.close()
+
+
+class WriterPool:
+    """Work-stealing writer pool: tasks are (agg_id, payload, on_done)."""
+
+    def __init__(self, n_workers: int):
+        self.n_workers = max(1, n_workers)
+        self._q: queue.Queue = queue.Queue()
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        for i in range(self.n_workers):
+            t = threading.Thread(target=self._worker, name=f"jbp-writer-{i}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                task = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            try:
+                fn, args = task
+                fn(*args)
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn: Callable, *args):
+        self._q.put((fn, args))
+
+    def drain(self):
+        self._q.join()
+
+    def shutdown(self):
+        self.drain()
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)

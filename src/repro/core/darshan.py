@@ -1,0 +1,202 @@
+"""Darshan-style I/O monitoring.
+
+The paper (§III-D) uses Darshan's LD_PRELOAD interposition to attribute I/O
+time per process to reads / writes / metadata. We own the whole I/O stack, so
+instrumentation is explicit: every file op in the framework goes through
+`InstrumentedFile`, and `DarshanMonitor` keeps darshan-parser-style counters
+per (rank, file) — POSIX_OPENS, POSIX_WRITES, POSIX_BYTES_WRITTEN,
+F_WRITE_TIME, F_META_TIME, ... plus access-size histograms and a time heatmap.
+
+Thread-safe: aggregator writer pools hammer this concurrently.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import defaultdict
+from typing import Optional
+
+_COUNTER_KEYS = (
+    "POSIX_OPENS", "POSIX_READS", "POSIX_WRITES", "POSIX_SEEKS",
+    "POSIX_FSYNCS", "POSIX_STATS", "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN",
+)
+_TIME_KEYS = ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME")
+
+_SIZE_BINS = (100, 1024, 10 * 1024, 100 * 1024, 1024**2, 4 * 1024**2,
+              10 * 1024**2, 100 * 1024**2)
+
+
+def _size_bin(n: int) -> str:
+    lo = 0
+    for hi in _SIZE_BINS:
+        if n <= hi:
+            return f"{lo}-{hi}"
+        lo = hi
+    return f">{_SIZE_BINS[-1]}"
+
+
+class DarshanMonitor:
+    """Global singleton registry of I/O counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self):
+        with getattr(self, "_lock", threading.Lock()):
+            self._t0 = time.perf_counter()
+            self._per_rank = defaultdict(lambda: defaultdict(float))
+            self._per_file = defaultdict(lambda: defaultdict(float))
+            self._size_hist = defaultdict(float)
+            self._heatmap = defaultdict(float)      # (rank, time_bin) -> bytes
+            self.heatmap_bin_s = 0.1
+
+    # ------------------------------------------------------------------ record
+    def record(self, rank: int, path: str, counter: str, inc: float = 1.0,
+               tkey: Optional[str] = None, dt: float = 0.0, nbytes: int = 0):
+        with self._lock:
+            r = self._per_rank[rank]
+            f = self._per_file[path]
+            r[counter] += inc
+            f[counter] += inc
+            if tkey:
+                r[tkey] += dt
+                f[tkey] += dt
+            if nbytes:
+                bkey = ("POSIX_BYTES_WRITTEN" if "WRITE" in counter
+                        else "POSIX_BYTES_READ")
+                r[bkey] += nbytes
+                f[bkey] += nbytes
+                self._size_hist[_size_bin(nbytes)] += 1
+                tbin = int((time.perf_counter() - self._t0) / self.heatmap_bin_s)
+                self._heatmap[(rank, tbin)] += nbytes
+
+    # ------------------------------------------------------------------ report
+    def report(self, n_procs: Optional[int] = None) -> dict:
+        """n_procs: logical process count to normalize by (aggregated writes
+        are attributed to aggregator ids, so 'observed ranks' undercounts the
+        job size — pass the real rank count for per-process numbers)."""
+        with self._lock:
+            ranks = sorted(self._per_rank)
+            agg: dict[str, float] = defaultdict(float)
+            for r in ranks:
+                for k, v in self._per_rank[r].items():
+                    agg[k] += v
+            n = max(n_procs if n_procs else len(ranks), 1)
+            per_proc = {k: agg.get(k, 0.0) / n
+                        for k in _COUNTER_KEYS + _TIME_KEYS}
+            return {
+                "n_ranks": len(ranks),
+                "total": dict(agg),
+                "avg_per_process": per_proc,
+                "files": {p: dict(c) for p, c in self._per_file.items()},
+                "access_size_histogram": dict(self._size_hist),
+            }
+
+    def cost_per_process(self, n_procs: Optional[int] = None) -> dict:
+        """Fig-5-style: average seconds per process for reads/writes/meta."""
+        rep = self.report(n_procs)["avg_per_process"]
+        return {"read_s": rep["F_READ_TIME"], "write_s": rep["F_WRITE_TIME"],
+                "meta_s": rep["F_META_TIME"]}
+
+    def heatmap(self) -> dict:
+        with self._lock:
+            return {f"rank{r}@{b * self.heatmap_bin_s:.1f}s": v
+                    for (r, b), v in sorted(self._heatmap.items())}
+
+    def total_files_written(self) -> int:
+        rep = self.report()
+        return sum(1 for p, c in rep["files"].items()
+                   if c.get("POSIX_BYTES_WRITTEN", 0) > 0)
+
+    def parser_dump(self, n_procs: Optional[int] = None) -> str:
+        """darshan-parser-style text report (one block per file record)."""
+        rep = self.report(n_procs)
+        lines = ["# darshan-style report (repro/core/darshan.py)",
+                 f"# nprocs: {n_procs or rep['n_ranks']}", "#"]
+        lines.append("# <counter> <value> — job totals")
+        for k in _COUNTER_KEYS + _TIME_KEYS:
+            lines.append(f"total_{k}\t{rep['total'].get(k, 0.0):.6f}")
+        lines.append("#")
+        lines.append("# per-file records")
+        for path, c in sorted(rep["files"].items()):
+            lines.append(f"file\t{path}")
+            for k in sorted(c):
+                lines.append(f"\t{k}\t{c[k]:.6f}")
+        lines.append("#")
+        lines.append("# access size histogram")
+        for k, v in sorted(rep["access_size_histogram"].items()):
+            lines.append(f"hist\t{k}\t{v:.0f}")
+        return "\n".join(lines)
+
+
+MONITOR = DarshanMonitor()
+
+
+class InstrumentedFile:
+    """File handle that reports every op to the monitor."""
+
+    def __init__(self, path: str, mode: str, rank: int = 0,
+                 monitor: DarshanMonitor = MONITOR):
+        self.path = str(path)
+        self.rank = rank
+        self.mon = monitor
+        t0 = time.perf_counter()
+        self._f = open(self.path, mode)
+        self.mon.record(rank, self.path, "POSIX_OPENS", 1.0, "F_META_TIME",
+                        time.perf_counter() - t0)
+
+    def write(self, data) -> int:
+        t0 = time.perf_counter()
+        n = self._f.write(data)
+        nb = n if isinstance(n, int) else len(data)
+        self.mon.record(self.rank, self.path, "POSIX_WRITES", 1.0,
+                        "F_WRITE_TIME", time.perf_counter() - t0, nbytes=nb)
+        return nb
+
+    def read(self, n: int = -1):
+        t0 = time.perf_counter()
+        data = self._f.read(n)
+        self.mon.record(self.rank, self.path, "POSIX_READS", 1.0,
+                        "F_READ_TIME", time.perf_counter() - t0,
+                        nbytes=len(data))
+        return data
+
+    def seek(self, off: int, whence: int = 0):
+        t0 = time.perf_counter()
+        r = self._f.seek(off, whence)
+        self.mon.record(self.rank, self.path, "POSIX_SEEKS", 1.0,
+                        "F_META_TIME", time.perf_counter() - t0)
+        return r
+
+    def tell(self) -> int:
+        return self._f.tell()
+
+    def flush(self):
+        """Userspace-buffer flush (write(2) without the fsync barrier)."""
+        self._f.flush()
+
+    def fsync(self):
+        t0 = time.perf_counter()
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.mon.record(self.rank, self.path, "POSIX_FSYNCS", 1.0,
+                        "F_META_TIME", time.perf_counter() - t0)
+
+    def close(self):
+        t0 = time.perf_counter()
+        self._f.close()
+        self.mon.record(self.rank, self.path, "POSIX_STATS", 0.0,
+                        "F_META_TIME", time.perf_counter() - t0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+
+def open_file(path, mode, rank: int = 0,
+              monitor: DarshanMonitor = MONITOR) -> InstrumentedFile:
+    return InstrumentedFile(path, mode, rank=rank, monitor=monitor)

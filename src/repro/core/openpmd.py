@@ -1,0 +1,233 @@
+"""openPMD data model (Series -> Iteration -> Mesh/ParticleSpecies ->
+Record -> RecordComponent) over the JBP engine.
+
+Follows the openPMD standard's structure and naming (basePath="/data/%T/",
+meshesPath="meshes/", particlesPath="particles/") and the openPMD-api usage
+protocol the paper describes in §III-A/B:
+
+  * a Series is the root object spanning all iterations,
+  * data accumulates in record components via store_chunk() and hits the
+    engine only at series.flush() (single action for I/O efficiency),
+  * once an iteration is closed it is never reopened,
+  * store_chunk needs (local array, offset, global extent) per rank —
+    exactly the information an MPI rank (or a jax.Array shard) owns.
+
+Group-based iteration encoding with steps: one BP directory, one engine
+step per iteration (the paper's chosen memory strategy).
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+
+OPENPMD_VERSION = "1.1.0"
+BASE_PATH = "/data/%T/"
+MESHES_PATH = "meshes/"
+PARTICLES_PATH = "particles/"
+
+
+class RecordComponent:
+    def __init__(self, path: str, series: "Series"):
+        self._path = path
+        self._series = series
+        self._dtype: Optional[np.dtype] = None
+        self._global_extent: Optional[tuple] = None
+        self._chunks: list[tuple[np.ndarray, tuple, int]] = []
+        self.attributes: dict[str, Any] = {"unitSI": 1.0}
+
+    def reset_dataset(self, dtype, global_extent: tuple):
+        self._dtype = np.dtype(dtype)
+        self._global_extent = tuple(int(x) for x in global_extent)
+        return self
+
+    def store_chunk(self, array, offset: tuple, *, rank: int = 0):
+        """Queue one rank's chunk. The referenced data must stay unmodified
+        until flush() (openPMD contract)."""
+        a = np.asarray(array)
+        if self._dtype is None:
+            self.reset_dataset(a.dtype, a.shape)
+        self._chunks.append((a, tuple(int(x) for x in offset), rank))
+        self._series._dirty.add(self)
+        return self
+
+    def set_attribute(self, k: str, v):
+        self.attributes[k] = v
+
+    # -------- read side ------------------------------------------------------
+    def load_chunk(self, offset: Optional[tuple] = None,
+                   extent: Optional[tuple] = None) -> np.ndarray:
+        step = int(self._path.split("/")[2])
+        return self._series._reader().read_var(step, self._path, offset, extent)
+
+    @property
+    def shape(self):
+        if self._global_extent is not None:
+            return self._global_extent
+        step = int(self._path.split("/")[2])
+        return tuple(self._series._reader().var_info(step, self._path)["shape"])
+
+
+class Record(dict):
+    """A physical quantity; dict of RecordComponents (scalar: key ''). """
+
+    SCALAR = ""
+
+    def __init__(self, path: str, series: "Series"):
+        super().__init__()
+        self._path = path
+        self._series = series
+        self.attributes: dict[str, Any] = {"unitDimension": [0.0] * 7}
+
+    def __getitem__(self, key) -> RecordComponent:
+        if key not in self:
+            comp_path = self._path if key == "" else f"{self._path}/{key}"
+            super().__setitem__(key, RecordComponent(comp_path, self._series))
+        return super().__getitem__(key)
+
+    def set_attribute(self, k, v):
+        self.attributes[k] = v
+
+
+class Mesh(Record):
+    def __init__(self, path, series):
+        super().__init__(path, series)
+        self.attributes.update({
+            "geometry": "cartesian", "dataOrder": "C", "axisLabels": ["x"],
+            "gridSpacing": [1.0], "gridGlobalOffset": [0.0], "gridUnitSI": 1.0,
+        })
+
+
+class ParticleSpecies(dict):
+    def __init__(self, path: str, series: "Series"):
+        super().__init__()
+        self._path = path
+        self._series = series
+        self.attributes: dict[str, Any] = {}
+
+    def __getitem__(self, key) -> Record:
+        if key not in self:
+            super().__setitem__(key, Record(f"{self._path}/{key}", self._series))
+        return super().__getitem__(key)
+
+
+class _Container(dict):
+    def __init__(self, factory):
+        super().__init__()
+        self._factory = factory
+
+    def __getitem__(self, key):
+        if key not in self:
+            super().__setitem__(key, self._factory(key))
+        return super().__getitem__(key)
+
+
+class Iteration:
+    def __init__(self, index: int, series: "Series"):
+        self.index = index
+        self._series = series
+        self.time = 0.0
+        self.dt = 1.0
+        self.time_unit_SI = 1.0
+        base = f"/data/{index}"
+        self.meshes = _Container(
+            lambda k: Mesh(f"{base}/meshes/{k}", series))
+        self.particles = _Container(
+            lambda k: ParticleSpecies(f"{base}/particles/{k}", series))
+        self._closed = False
+
+    def close(self):
+        """Flush and seal — a closed iteration is never reopened."""
+        self._series.flush()
+        self._closed = True
+
+
+class Series:
+    """Root openPMD object. mode: 'w' (create) or 'r' (read).
+
+    engine_config carries the ADIOS2-style knobs: aggregators
+    (OPENPMD_ADIOS2_BP5_NumAgg), codec (blosc/bzip2), Lustre striping.
+    """
+
+    def __init__(self, path, mode: str = "w", *, n_ranks: int = 1,
+                 engine_config: EngineConfig = EngineConfig(),
+                 meta: Optional[dict] = None):
+        self.path = pathlib.Path(str(path))
+        self.mode = mode
+        self.n_ranks = n_ranks
+        self.engine_config = engine_config
+        self.iterations = _Container(lambda k: Iteration(k, self))
+        self._dirty: set[RecordComponent] = set()
+        self._writer: Optional[BpWriter] = None
+        self._reader_obj: Optional[BpReader] = None
+        self._open_step: Optional[int] = None
+        self.attributes = {
+            "openPMD": OPENPMD_VERSION,
+            "openPMDextension": 0,
+            "basePath": BASE_PATH,
+            "meshesPath": MESHES_PATH,
+            "particlesPath": PARTICLES_PATH,
+            "iterationEncoding": "groupBased",
+            "iterationFormat": BASE_PATH,
+            "software": "repro-jbp",
+        }
+        if meta:
+            self.attributes.update(meta)
+        if mode == "r":
+            self._reader()
+
+    # ----------------------------------------------------------------- write
+    def _get_writer(self) -> BpWriter:
+        if self._writer is None:
+            self._writer = BpWriter(self.path, self.n_ranks, self.engine_config)
+            for k, v in self.attributes.items():
+                self._writer.set_attribute(k, v)
+        return self._writer
+
+    def flush(self):
+        """Write all dirty record components as one engine step."""
+        if not self._dirty:
+            return None
+        by_step: dict[int, list[RecordComponent]] = {}
+        for rc in self._dirty:
+            step = int(rc._path.split("/")[2])
+            by_step.setdefault(step, []).append(rc)
+        w = self._get_writer()
+        prof = None
+        for step in sorted(by_step):
+            w.begin_step(step)
+            it = self.iterations[step]
+            w.set_attribute(f"/data/{step}/time", it.time)
+            w.set_attribute(f"/data/{step}/dt", it.dt)
+            for rc in by_step[step]:
+                for arr, off, rank in rc._chunks:
+                    w.put(rc._path, arr, global_shape=rc._global_extent,
+                          offset=off, rank=rank)
+                rc._chunks.clear()
+            prof = w.end_step()
+        self._dirty.clear()
+        return prof
+
+    def close(self):
+        self.flush()
+        if self._writer is not None:
+            self._writer.close()
+            self._writer = None
+
+    # ------------------------------------------------------------------ read
+    def _reader(self) -> BpReader:
+        if self._reader_obj is None:
+            self._reader_obj = BpReader(self.path)
+        return self._reader_obj
+
+    def read_iterations(self) -> list[int]:
+        return self._reader().valid_steps()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

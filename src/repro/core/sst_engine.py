@@ -1,0 +1,79 @@
+"""SST-style streaming engine — the paper's stated future work (§VI):
+"the ADIOS2 SST engine enables the direct connection of data producers and
+consumers ... for in-situ processing, analysis, and visualization".
+
+`SstStream` is the JBP-native analogue: a bounded in-memory step queue with
+the same put()/step protocol as BpWriter, so a Series can stream iterations
+to an in-process consumer (live diagnostics, training-metric dashboards)
+WITHOUT touching the filesystem. Back-pressure blocks the producer when the
+consumer lags (queue_depth), exactly like SST's reliable mode.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import numpy as np
+
+
+class SstStream:
+    def __init__(self, queue_depth: int = 4):
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._step: Optional[int] = None
+        self._pending: dict[str, dict] = {}
+        self._closed = threading.Event()
+
+    # ------------------------------------------------------------- producer
+    def begin_step(self, step: int):
+        assert self._step is None
+        self._step = step
+        self._pending = {}
+
+    def put(self, name: str, array: np.ndarray, *, global_shape=None,
+            offset=None, rank: int = 0):
+        assert self._step is not None
+        a = np.asarray(array)
+        var = self._pending.setdefault(name, {
+            "dtype": a.dtype, "global_shape": tuple(global_shape or a.shape),
+            "chunks": []})
+        var["chunks"].append((tuple(offset or (0,) * a.ndim), a))
+
+    def end_step(self):
+        """Assemble the step's variables and hand them to the consumer
+        (blocks when the consumer is queue_depth behind)."""
+        step = self._step
+        out: dict[str, np.ndarray] = {}
+        for name, var in self._pending.items():
+            g = np.zeros(var["global_shape"], var["dtype"])
+            for off, arr in var["chunks"]:
+                sl = tuple(slice(o, o + s) for o, s in zip(off, arr.shape))
+                g[sl] = arr
+            out[name] = g
+        self._q.put((step, out))
+        self._step = None
+        self._pending = {}
+
+    def close(self):
+        self._closed.set()
+        self._q.put(None)
+
+    # ------------------------------------------------------------- consumer
+    def steps(self, timeout: Optional[float] = None) -> Iterator[tuple]:
+        while True:
+            item = self._q.get(timeout=timeout)
+            if item is None:
+                return
+            yield item
+
+
+def attach_consumer(stream: SstStream, fn: Callable[[int, dict], Any],
+                    *, daemon: bool = True) -> threading.Thread:
+    """Run `fn(step, vars)` on every streamed step in a background thread."""
+    def loop():
+        for step, data in stream.steps():
+            fn(step, data)
+
+    t = threading.Thread(target=loop, daemon=daemon)
+    t.start()
+    return t

@@ -1,0 +1,131 @@
+"""Lustre-style file striping over emulated OSTs.
+
+A logical file is split into `stripe_size` stripes distributed round-robin
+(raid0 pattern) over `stripe_count` object storage targets. OSTs are
+emulated as object files in per-OST directories — the layout math, the
+alignment behaviour, and the count x size performance tradeoff (paper Fig 9)
+all reproduce structurally; a `getstripe()` introspection mirrors
+`lfs getstripe` (paper Listing 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import threading
+from typing import Optional
+
+from repro.core.darshan import MONITOR, open_file
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeConfig:
+    stripe_count: int = 1
+    stripe_size: int = 1 * 1024 * 1024          # bytes
+    pattern: str = "raid0"
+
+    def ost_of(self, stripe_idx: int) -> int:
+        return stripe_idx % self.stripe_count
+
+    def object_offset(self, stripe_idx: int) -> int:
+        return (stripe_idx // self.stripe_count) * self.stripe_size
+
+
+class OstPool:
+    """A set of emulated OSTs rooted under `root/ost<k>/`."""
+
+    def __init__(self, root, n_osts: int, *, slow_osts: Optional[dict] = None):
+        self.root = pathlib.Path(root)
+        self.n_osts = n_osts
+        self.slow_osts = slow_osts or {}        # ost_id -> extra seconds/write
+        for k in range(n_osts):
+            (self.root / f"ost{k}").mkdir(parents=True, exist_ok=True)
+
+    def object_path(self, ost: int, obj_name: str) -> pathlib.Path:
+        return self.root / f"ost{ost}" / obj_name
+
+
+class StripedFile:
+    """Write/read a logical byte stream striped across an OstPool."""
+
+    def __init__(self, pool: OstPool, name: str, cfg: StripeConfig,
+                 rank: int = 0, mode: str = "w"):
+        assert cfg.stripe_count <= pool.n_osts, (cfg.stripe_count, pool.n_osts)
+        self.pool = pool
+        self.name = name
+        self.cfg = cfg
+        self.rank = rank
+        self._lock = threading.Lock()
+        self.logical_size = 0
+        self._handles = {}
+        self._mode = mode
+        if mode == "w":
+            for k in range(cfg.stripe_count):
+                p = pool.object_path(k, f"{name}.obj")
+                self._handles[k] = open_file(p, "wb", rank=rank)
+
+    # ----------------------------------------------------------------- write
+    def write(self, data: bytes, offset: Optional[int] = None) -> int:
+        """Stripe-split `data` at logical `offset` (default: append)."""
+        import time as _time
+        with self._lock:
+            off = self.logical_size if offset is None else offset
+            ss = self.cfg.stripe_size
+            pos = 0
+            while pos < len(data):
+                stripe_idx = (off + pos) // ss
+                intra = (off + pos) % ss
+                take = min(ss - intra, len(data) - pos)
+                ost = self.cfg.ost_of(stripe_idx)
+                h = self._handles[ost]
+                h.seek(self.cfg.object_offset(stripe_idx) + intra)
+                slow = self.pool.slow_osts.get(ost, 0.0)
+                if slow:
+                    _time.sleep(slow)            # straggler-OST simulation
+                h.write(data[pos:pos + take])
+                pos += take
+            self.logical_size = max(self.logical_size, off + len(data))
+            return len(data)
+
+    def fsync(self):
+        for h in self._handles.values():
+            h.fsync()
+
+    def close(self):
+        for h in self._handles.values():
+            h.close()
+        self._handles.clear()
+
+    # ------------------------------------------------------------------ read
+    def read(self, offset: int, length: int) -> bytes:
+        ss = self.cfg.stripe_size
+        out = bytearray()
+        pos = 0
+        while pos < length:
+            stripe_idx = (offset + pos) // ss
+            intra = (offset + pos) % ss
+            take = min(ss - intra, length - pos)
+            ost = self.cfg.ost_of(stripe_idx)
+            p = self.pool.object_path(ost, f"{self.name}.obj")
+            with open_file(p, "rb", rank=self.rank) as h:
+                h.seek(self.cfg.object_offset(stripe_idx) + intra)
+                out += h.read(take)
+            pos += take
+        return bytes(out)
+
+    # ------------------------------------------------------------- introspect
+    def getstripe(self) -> dict:
+        """`lfs getstripe` analogue (paper Listing 1)."""
+        objs = []
+        for k in range(self.cfg.stripe_count):
+            p = self.pool.object_path(k, f"{self.name}.obj")
+            objs.append({"obdidx": k, "objid": f"{abs(hash(str(p))) & 0xffffffff:#x}",
+                         "path": str(p),
+                         "size": p.stat().st_size if p.exists() else 0})
+        return {"lmm_stripe_count": self.cfg.stripe_count,
+                "lmm_stripe_size": self.cfg.stripe_size,
+                "lmm_pattern": self.cfg.pattern,
+                "lmm_layout_gen": 0,
+                "lmm_stripe_offset": 0,
+                "objects": objs,
+                "logical_size": self.logical_size}

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: Blosc-style byte shuffle (compression preconditioner).
+
+The shuffle transposes the [n_items, itemsize] byte matrix so that the k-th
+byte of every item is contiguous — floats then compress 2-5x better (paper
+§IV-D). On a TPU pod this runs ON-CHIP next to the checkpoint shards before
+the DMA to host, so the host CPU only pays the cheap LZ stage.
+
+TPU adaptation: bytes are processed as int32 lanes (the VPU has no efficient
+sub-word shuffles across lanes); a [TILE_N, itemsize] uint8 block is widened
+to int32 in VMEM, transposed, and narrowed on the way out. BlockSpec tiles
+the item axis; itemsize (4/8) always fits a VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 1024
+
+
+def _shuffle_kernel(x_ref, o_ref):
+    # x_ref: [TILE_N, itemsize] uint8 ; o_ref: [itemsize, TILE_N] uint8
+    blk = x_ref[...].astype(jnp.int32)       # widen: VPU-friendly lanes
+    o_ref[...] = blk.T.astype(jnp.uint8)
+
+
+def _unshuffle_kernel(x_ref, o_ref):
+    blk = x_ref[...].astype(jnp.int32)
+    o_ref[...] = blk.T.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("itemsize", "interpret"))
+def byte_shuffle_tpu(data: jax.Array, *, itemsize: int,
+                     interpret: bool = False) -> jax.Array:
+    """data: uint8 [n_bytes] with n_bytes % (itemsize*TILE_N) == 0 (ops.py
+    pads). Returns shuffled uint8 [n_bytes]."""
+    n = data.shape[0] // itemsize
+    x = data.reshape(n, itemsize)
+    grid = (n // TILE_N,)
+    out = pl.pallas_call(
+        _shuffle_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, itemsize), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((itemsize, TILE_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((itemsize, n), jnp.uint8),
+        interpret=interpret,
+    )(x)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("itemsize", "interpret"))
+def byte_unshuffle_tpu(data: jax.Array, *, itemsize: int,
+                       interpret: bool = False) -> jax.Array:
+    n = data.shape[0] // itemsize
+    x = data.reshape(itemsize, n)
+    grid = (n // TILE_N,)
+    out = pl.pallas_call(
+        _unshuffle_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((itemsize, TILE_N), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((TILE_N, itemsize), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, itemsize), jnp.uint8),
+        interpret=interpret,
+    )(x)
+    return out.reshape(-1)

@@ -1,0 +1,40 @@
+"""Jit'd public wrapper: pads to kernel tiling, dispatches kernel vs oracle.
+
+On this CPU container the kernel runs interpret=True (Python-level Pallas
+execution) — the TPU path is identical code with interpret=False.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitshuffle.kernel import (TILE_N, byte_shuffle_tpu,
+                                             byte_unshuffle_tpu)
+from repro.kernels.bitshuffle.ref import byte_shuffle_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def shuffle(data: jax.Array, *, itemsize: int,
+            interpret: bool | None = None) -> jax.Array:
+    """uint8 [n] -> shuffled uint8 [n]; n padded internally to tile size."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    n = data.shape[0]
+    tile_bytes = itemsize * TILE_N
+    pad = (-n) % tile_bytes
+    x = jnp.pad(data, (0, pad))
+    # shuffle the padded [n_items, itemsize] matrix; slicing the first n
+    # bytes of the inverse-unshuffled stream restores exactly data, but for
+    # the compression pipeline we keep the padded frame (header records n).
+    out = byte_shuffle_tpu(x, itemsize=itemsize, interpret=interpret)
+    return out, n
+
+
+def unshuffle(data: jax.Array, n: int, *, itemsize: int,
+              interpret: bool | None = None) -> jax.Array:
+    interpret = _auto_interpret() if interpret is None else interpret
+    out = byte_unshuffle_tpu(data, itemsize=itemsize, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the byte-shuffle kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def byte_shuffle_ref(data, *, itemsize: int):
+    n = data.shape[0] // itemsize
+    return data.reshape(n, itemsize).T.reshape(-1)
+
+
+def byte_unshuffle_ref(data, *, itemsize: int):
+    n = data.shape[0] // itemsize
+    return data.reshape(itemsize, n).T.reshape(-1)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: PIC charge deposition (particle -> grid scatter).
+
+TPU adaptation (DESIGN.md §2): GPUs do deposition with atomics; the TPU has
+no scatter-atomics, so the scatter is restated as a ONE-HOT MATMUL that the
+MXU executes natively:  rho[c] = sum_p onehot(cell_p == c) * w_p. The grid
+is tiled (particle tiles x cell tiles); each (pt, ct) block builds the
+[TILE_P, TILE_C] one-hot mask in VMEM and reduces over particles. CIC
+weighting contributes to cells i0 and i0+1 with (1-frac, frac).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_P = 1024
+TILE_C = 256
+
+
+def _deposit_kernel(x_ref, w_ref, o_ref, *, dx: float, clip_max: int):
+    pt = pl.program_id(0)
+    ct = pl.program_id(1)
+    x = x_ref[...]                                  # [TILE_P]
+    w = w_ref[...]                                  # [TILE_P] (weight*alive)
+    xi = x / dx
+    i0 = jnp.floor(xi).astype(jnp.int32)
+    frac = (xi - i0.astype(jnp.float32))
+    cell_base = ct * TILE_C
+    cells = cell_base + jax.lax.broadcasted_iota(jnp.int32, (TILE_P, TILE_C), 1)
+    i0c = jnp.clip(i0, 0, clip_max)[:, None]
+    i1c = jnp.clip(i0 + 1, 0, clip_max)[:, None]
+    onehot0 = (cells == i0c).astype(jnp.float32)
+    onehot1 = (cells == i1c).astype(jnp.float32)
+    contrib = (onehot0 * (w * (1.0 - frac))[:, None] +
+               onehot1 * (w * frac)[:, None])       # [TILE_P, TILE_C]
+    partial = jnp.sum(contrib, axis=0)              # [TILE_C]
+
+    @pl.when(pt == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial / dx
+
+
+@functools.partial(jax.jit, static_argnames=("n_cells", "clip_max", "dx", "interpret"))
+def deposit_tpu(x, w, *, n_cells: int, clip_max: int, dx: float,
+                interpret: bool = False) -> jax.Array:
+    """x: [N] positions, w: [N] effective weights (weight*alive) with
+    N % TILE_P == 0 and n_cells % TILE_C == 0 (ops.py pads)."""
+    n = x.shape[0]
+    grid = (n // TILE_P, n_cells // TILE_C)
+    return pl.pallas_call(
+        functools.partial(_deposit_kernel, dx=dx, clip_max=clip_max),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_P,), lambda pt, ct: (pt,)),
+                  pl.BlockSpec((TILE_P,), lambda pt, ct: (pt,))],
+        out_specs=pl.BlockSpec((TILE_C,), lambda pt, ct: (ct,)),
+        out_shape=jax.ShapeDtypeStruct((n_cells,), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,6 @@
+"""Oracle: the production jnp CIC deposition from pic/grid.py."""
+from repro.pic.grid import deposit_cic  # noqa: F401
+
+
+def deposit_ref(x, w, alive, n_cells: int, dx: float):
+    return deposit_cic(x, w, alive, n_cells, dx)

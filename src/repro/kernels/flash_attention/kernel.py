@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused flash attention forward (online softmax).
+
+This is the VMEM-resident version of models/attention._flash_fwd_impl: the
+[qc, kc] probability tile lives entirely in VMEM scratch between the two MXU
+matmuls, so HBM traffic is O(S*D) instead of the jnp path's O(S^2) — the
+dominant memory-roofline term the §Perf hillclimb removes.
+
+Grid: (B, H, nq, nk) — nk innermost so the (m, l, acc) scratch accumulators
+persist across the kv sweep for one q tile (TPU grids execute sequentially
+over the trailing dim). Block shapes keep the MXU shapes aligned:
+q [qc, D], k/v [kc, D] with qc=kc=512, D padded to >=128 by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_QC = 512
+DEFAULT_KC = 512
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      causal: bool, qc: int, kc: int, scale: float,
+                      kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # [qc, D]
+    k = k_ref[0, 0]                                   # [kc, D]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kp = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    if causal:
+        qp = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        s = jnp.where(kp <= qp, s, NEG_INF)
+    s = jnp.where(kp < kv_len, s, NEG_INF)            # padded kv columns
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # [qc, kc] — stays in VMEM
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr +
+                    jax.lax.dot_general(p.astype(v.dtype), v,
+                                        (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "qc", "kc", "kv_len",
+                                    "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, qc: int = DEFAULT_QC,
+                        kc: int = DEFAULT_KC, kv_len: int | None = None,
+                        interpret: bool = False):
+    """q/k/v: [B, H, S, D] (head-major layout for clean blocking).
+    S % qc == S % kc == 0 (ops.py pads). Returns [B, H, S, D]."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    qc = min(qc, Sq)
+    kc = min(kc, Skv)
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_flash_fwd_kernel, causal=causal, qc=qc, kc=kc,
+                               scale=scale, kv_len=kv_len or Skv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kc, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, kc, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),       # m
+            pltpu.VMEM((qc, 1), jnp.float32),       # l
+            pltpu.VMEM((qc, D), jnp.float32),       # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

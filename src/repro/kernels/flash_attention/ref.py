@@ -1,0 +1,16 @@
+"""Oracles: the production chunked-jnp flash (models/attention) and the
+O(S^2) reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention_jnp, reference_attention  # noqa: F401
+
+
+def flash_ref_headmajor(q, k, v, *, causal=True):
+    """[B,H,S,D] head-major wrapper around the O(S^2) reference."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = reference_attention(qt, kt, vt, causal=causal)
+    return o.transpose(0, 2, 1, 3)

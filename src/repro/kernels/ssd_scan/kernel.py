@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (fused intra+inter chunk).
+
+The chunked SSD algorithm (models/ssm.ssd_chunked) maps naturally onto the
+MXU: per chunk, the intra-chunk decay-masked score matmul and the
+state-to-output matmul are [Q,Q]x[Q,P] / [Q,N]x[N,P] dots; the inter-chunk
+recurrence is a [P,N] state carried in VMEM scratch across the sequential
+chunk grid dim. HBM traffic is O(S*(P+N)) per head — the decay matrix L
+([Q,Q]) never leaves VMEM, which is the kernel's whole advantage over the
+lowered-jnp version.
+
+Grid: (B, H, nc) — nc innermost so state scratch persists per (b, h).
+Block shapes: x [Q,P], dt [Q,1], B/C [Q,N]; Q=chunk (128), P=headdim,
+N=d_state. A [1,1] scalar per head rides SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)              # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)            # [Q, 1]
+    A = a_ref[0, 0]                                  # scalar (<0)
+    Bm = b_ref[0].astype(jnp.float32)                # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                # [Q, N]
+    D = d_ref[0, 0]                                  # scalar skip
+
+    dA = dt * A                                      # [Q,1]
+    cs = jnp.cumsum(dA, axis=0)                      # inclusive, [Q,1]
+    total = cs[-1, 0]
+    xdt = x * dt                                     # [Q,P]
+
+    # intra-chunk: scores masked by decay
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(li >= si, jnp.exp(cs - cs[:, 0][None, :]), 0.0)
+    y = jax.lax.dot_general(scores * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q,P]
+
+    # carried-state contribution: C_l . state, decayed from chunk start
+    out_decay = jnp.exp(cs)                          # [Q,1]
+    y = y + out_decay * jax.lax.dot_general(
+        Cm, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [Q,N]x[P,N]^T -> [Q,P]
+
+    # state update: state = state*exp(total) + sum_s decay_s * B_s (x) xdt_s
+    decay_states = jnp.exp(total - cs)               # [Q,1]
+    upd = jax.lax.dot_general(xdt * decay_states, Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # [P,N]
+    state_ref[...] = state_ref[...] * jnp.exp(total) + upd
+
+    y_ref[0, 0] = (y + D * x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_tpu(x, dt, A, B, C, D, *, chunk: int = DEFAULT_CHUNK,
+                 interpret: bool = False):
+    """x: [Bb,H,S,P] head-major; dt: [Bb,H,S]; A/D: [H]; B/C: [Bb,S,N].
+    S % chunk == 0 (ops.py pads). Returns y [Bb,H,S,P]."""
+    Bb, H, S, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    dt3 = dt[..., None]                              # [Bb,H,S,1]
+    A2 = A.reshape(H, 1)
+    D2 = D.reshape(H, 1)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, A2, B, C, D2)

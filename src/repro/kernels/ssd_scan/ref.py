@@ -1,0 +1,2 @@
+"""Oracles: the production chunked jnp SSD and the recurrent reference."""
+from repro.models.ssm import ssd_chunked, ssd_recurrent_reference  # noqa: F401

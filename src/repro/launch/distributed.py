@@ -1,0 +1,55 @@
+"""Multi-host bring-up for real pods (the 1000+-node path).
+
+On a TPU pod slice each host runs this once before anything else; the
+single-controller code in train.py/serve.py then works unchanged —
+jax.make_mesh sees the global device set, arrays are globally sharded, and
+each host's data loader reads its shard (data/pipeline.py n_shards/shard_id).
+
+This container has one process/one device, so initialize() degrades to a
+no-op — but the contract (env-driven, idempotent, crash-barrier on restart)
+is the deployable one:
+
+  * COORDINATOR failure: jax.distributed heartbeats fail fast; the job
+    controller restarts all processes, which re-enter through
+    `Trainer.run()` -> `CheckpointManager.restore_latest()` — the newest
+    crc-valid checkpoint wins, torn writes are skipped (ckpt/manager.py).
+  * ELASTIC restart at a different world size: restore_sharded() reads
+    per-shard boxes from the chunk table, so N->M rescale reads
+    min(bytes-needed), not the full state.
+  * STRAGGLERS: per-host JBP writer pools absorb slow OSTs (work stealing);
+    async checkpointing keeps slow storage off the step path; cross-pod
+    gradient traffic can run int8 error-feedback compressed
+    (optim/grad_compress.py).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def initialize(coordinator: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None) -> dict:
+    """Idempotent jax.distributed bring-up from args or env
+    (JAX_COORDINATOR / JAX_NUM_PROCESSES / JAX_PROCESS_ID)."""
+    import jax
+
+    coordinator = coordinator or os.environ.get("JAX_COORDINATOR")
+    num_processes = num_processes or int(os.environ.get("JAX_NUM_PROCESSES", "1"))
+    process_id = (process_id if process_id is not None
+                  else int(os.environ.get("JAX_PROCESS_ID", "0")))
+    if num_processes > 1:
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    return {"process_id": process_id, "num_processes": num_processes,
+            "local_devices": len(jax.local_devices()),
+            "global_devices": len(jax.devices())}
+
+
+def io_rank_range(n_io_ranks: int, process_id: int, num_processes: int):
+    """Which logical I/O ranks this host owns (block assignment, mirroring
+    aggregation.aggregator_of so rank->aggregator locality is preserved)."""
+    lo = process_id * n_io_ranks // num_processes
+    hi = (process_id + 1) * n_io_ranks // num_processes
+    return range(lo, hi)

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: `pod` (DCN, pure data-parallel replicas), `data` (ICI, batch +
+    FSDP/ZeRO shards), `model` (ICI, tensor/expert parallel).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(*, multi_pod: bool = False, devices=None):
+    """Small-device-count mesh with the same axis names (tests / CI)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if multi_pod:
+        assert n % 2 == 0 and n >= 8, n
+        shape = (2, n // 4, 2)
+        axes = ("pod", "data", "model")
+    else:
+        assert n % 2 == 0, n
+        shape = (n // 2, 2)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_summary(mesh) -> dict:
+    return {"axis_names": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+            "n_devices": int(mesh.size)}

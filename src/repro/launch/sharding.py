@@ -1,0 +1,260 @@
+"""Partition rules: param/opt/cache pytrees -> NamedShardings.
+
+Policy (DESIGN.md §4):
+  * `model` (tp): attention heads OR head_dim (per-arch, see attn_layout),
+    d_ff, vocab, experts, SSM heads.
+  * `data` (fsdp): the complementary weight dim (ZeRO-3-style); batch.
+  * `pod`: pure data parallel — batch only, params replicated across pods.
+
+Every rule is divisibility-guarded: a dim that doesn't divide the axis size
+falls back to replicated on that axis (e.g. smollm's 15 heads).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+BATCH = ("pod", "data")
+
+
+def attn_layout(cfg, tp_size: int) -> str:
+    """Legacy single-layout summary (tests/reporting)."""
+    q, kv = attn_layouts(cfg, tp_size)
+    if q == (TP, None):
+        return "heads"
+    if q == (None, TP):
+        return "head_dim"
+    return "replicated"
+
+
+def attn_layouts(cfg, tp_size: int):
+    """((q_heads_spec, q_hd_spec), (kv_heads_spec, kv_hd_spec)).
+
+    Query heads shard over `model` whenever H divides; KV heads shard only
+    when Hkv divides — otherwise KV projections/caches stay REPLICATED over
+    `model` (they are G-times smaller than Q, and replication avoids the
+    per-layer resharding all-to-all that a mismatched head_dim layout costs
+    — see EXPERIMENTS.md §Perf hillclimb B). Archs where H doesn't divide
+    (arctic 56, smollm 15) fall back to head_dim sharding for both."""
+    if not cfg.n_heads:
+        return (None, None), (None, None)
+    hd_ok = cfg.resolved_head_dim % tp_size == 0
+    if cfg.n_heads % tp_size == 0:
+        q = (TP, None)
+        kv = (TP, None) if cfg.n_kv_heads % tp_size == 0 else (None, None)
+        return q, kv
+    if hd_ok:
+        return (None, TP), (None, TP)
+    return (None, None), (None, None)
+
+
+# --------------------------------------------------------------------------
+# base specs keyed by (tail-of-path pattern). Leaves with extra leading stack
+# dims get Nones prepended.
+# --------------------------------------------------------------------------
+def _param_base_spec(path: tuple[str, ...], cfg, tp_size: int):
+    j = "/".join(path)
+    (qh, qd), (kh, kd) = attn_layouts(cfg, tp_size)
+
+    if path[-1] == "table":                       # embed / lm_head [V, d]
+        return (TP, FSDP)
+    if path[-2:] == ("wo", "w"):                  # [H, hd, d_model]
+        return (qh, qd, FSDP)
+    if len(path) >= 2 and path[-2] in ("wq",):
+        if path[-1] == "w":                       # [d_model, H, hd]
+            return (FSDP, qh, qd)
+        return (qh, qd)                           # bias [H, hd]
+    if len(path) >= 2 and path[-2] in ("wk", "wv"):
+        if path[-1] == "w":                       # [d_model, Hkv, hd]
+            return (FSDP, kh, kd)
+        return (kh, kd)
+    if path[-1] == "router":                      # [d_model, E]
+        return (FSDP, None)
+    if "experts" in path:
+        # expert-parallel over `model` + Megatron col/row parallel over
+        # `data` WITHIN each expert: weights are fully sharded with NO
+        # ZeRO-3 per-microbatch re-gathers (§Perf hillclimb A it.6)
+        if path[-1] in ("gate", "up"):            # [E, d_model, d_ff]
+            return (TP, None, FSDP)
+        return (TP, FSDP, None)                   # down [E, d_ff, d_model]
+    if path[-2:] == ("gate", "w") or path[-2:] == ("up", "w"):
+        return (FSDP, TP)                         # ffn in [d_model, d_ff]
+    if path[-2:] == ("down", "w"):
+        return (TP, FSDP)                         # ffn out [d_ff, d_model]
+    if path[-2:] == ("gate", "b") or path[-2:] == ("up", "b"):
+        return (TP,)
+    if path[-2:] == ("down", "b"):
+        return (FSDP,)
+    # ---- mamba2 -------------------------------------------------------------
+    if path[-2:] == ("wz", "w") or path[-2:] == ("wx", "w"):
+        return (FSDP, TP)                         # [d_model, d_inner]
+    if path[-2:] == ("wB", "w") or path[-2:] == ("wC", "w"):
+        return (FSDP, None)                       # [d_model, N] group-shared
+    if path[-2:] == ("wdt", "w"):
+        return (FSDP, TP)                         # [d_model, H]
+    if path[-2:] == ("out_proj", "w"):
+        return (TP, FSDP)                         # [d_inner, d_model]
+    if path[-2:] == ("conv_x", "w"):
+        return (None, TP)                         # [K, d_inner]
+    if path[-2:] == ("conv_x", "b"):
+        return (TP,)
+    if len(path) >= 2 and path[-2] in ("conv_B", "conv_C"):
+        return (None, None) if path[-1] == "w" else (None,)
+    if path[-1] in ("A_log", "D", "dt_bias"):
+        return (TP,)                              # [H_ssm]
+    if path[-2:] == ("wz", "b") or path[-2:] == ("wx", "b"):
+        return (TP,)
+    if path[-1] in ("b",):                        # remaining 1-D biases
+        return (None,)
+    if path[-1] == "scale":                       # norms
+        shape_hint = None
+        return None                               # rank-resolved below (replicate)
+    if path[-1] in ("attn_gate", "ffn_gate"):
+        return None
+    return None                                   # default: replicate
+
+
+def _guard(spec_entries, shape, mesh) -> P:
+    """Drop axes that don't divide the dim; filter axes absent from mesh."""
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in sizes)
+        total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if not axes or dim % total != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def param_pspec_tree(cfg, mesh, shapes_tree):
+    """PartitionSpec pytree matching `shapes_tree` (from model.param_shapes)."""
+    tp_size = int(mesh.shape[TP]) if TP in mesh.axis_names else 1
+
+    def rule(path, leaf):
+        names = tuple(getattr(k, "key", str(k)) for k in path)
+        base = _param_base_spec(names, cfg, tp_size)
+        rank = len(leaf.shape)
+        if base is None:
+            base = ()
+        pad = rank - len(base)
+        assert pad >= 0, (names, leaf.shape, base)
+        entries = (None,) * pad + tuple(base)
+        return _guard(entries, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, shapes_tree)
+
+
+def param_sharding_tree(cfg, mesh, shapes_tree):
+    specs = param_pspec_tree(cfg, mesh, shapes_tree)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_sharding_tree(cfg, mesh, shapes_tree):
+    """Optimizer-moment shardings: param specs with the FSDP axis widened to
+    ('pod', FSDP) — ZeRO-1 across pods (no-op on single-pod meshes)."""
+    if "pod" not in mesh.axis_names:
+        return param_sharding_tree(cfg, mesh, shapes_tree)
+    specs = param_pspec_tree(cfg, mesh, shapes_tree)
+
+    def widen(path, spec):
+        leaf = _lookup(shapes_tree, path)
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        out = []
+        widened = False
+        for dim, e in zip(leaf.shape, entries):
+            axes = e if isinstance(e, tuple) else ((e,) if e else ())
+            if not widened and FSDP in axes:
+                cand = ("pod",) + axes
+                total = int(np.prod([dict(mesh.shape)[a] for a in cand]))
+                if dim % total == 0:
+                    out.append(cand)
+                    widened = True
+                    continue
+            out.append(e)
+        return P(*out)
+
+    widened = jax.tree_util.tree_map_with_path(widen, specs)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), widened)
+
+
+def _lookup(tree, path):
+    node = tree
+    for k in path:
+        key = getattr(k, "key", getattr(k, "idx", None))
+        node = node[key]
+    return node
+
+
+# --------------------------------------------------------------------------
+# activations / batches / caches
+# --------------------------------------------------------------------------
+def batch_spec(mesh, rank: int, *, batch_axes=BATCH) -> NamedSharding:
+    """Shard dim 0 over the batch axes present in the mesh (guarded)."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    return NamedSharding(mesh, P(axes if axes else None, *([None] * (rank - 1))))
+
+
+def batch_sharding_for(mesh, sds, *, batch_axes=BATCH):
+    sizes = dict(mesh.shape)
+    axes = tuple(a for a in batch_axes if a in sizes)
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    if not axes or sds.shape[0] % total != 0:
+        return NamedSharding(mesh, P(*([None] * len(sds.shape))))
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
+                                 *([None] * (len(sds.shape) - 1))))
+
+
+def cache_pspec_tree(cfg, mesh, cache_spec_tree):
+    """Decode-cache shardings: batch dim over `data`, heads/head_dim over
+    `model` per attn_layout; SSM heads over `model`."""
+    tp_size = int(mesh.shape[TP]) if TP in mesh.axis_names else 1
+    _, (kh, kd) = attn_layouts(cfg, tp_size)
+    # decode caches are the capacity-critical tensors: even when the (small)
+    # KV *weights* stay replicated for GQA, the 32k cache must shard — fall
+    # back to head_dim sharding (partial-dot + tiny score all-reduce).
+    if kh is None and kd is None and cfg.n_heads \
+            and cfg.resolved_head_dim % tp_size == 0 and tp_size > 1:
+        kd = TP
+
+    def rule(path, leaf):
+        names = tuple(getattr(k, "key", str(k)) for k in path)
+        rank = len(leaf.shape)
+        key = names[-1] if names else ""
+        if key in ("k", "v", "cross_k", "cross_v"):
+            # [..., B, S, Hkv, hd] — batch at rank-4, heads at rank-2
+            entries = [None] * rank
+            entries[rank - 4] = FSDP
+            entries[rank - 2] = kh
+            entries[rank - 1] = kd
+        elif key == "ssm":
+            # [..., B, H, P, N]
+            entries = [None] * rank
+            entries[rank - 4] = FSDP
+            entries[rank - 3] = TP
+        else:
+            # conv tails (tuple leaves): [..., B, K-1, C]; C = d_inner -> TP
+            entries = [None] * rank
+            entries[rank - 3] = FSDP
+            if leaf.shape[-1] == cfg.d_inner:
+                entries[rank - 1] = TP
+        return _guard(tuple(entries), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_spec_tree)
+
+
+def cache_sharding_tree(cfg, mesh, cache_spec_tree):
+    specs = cache_pspec_tree(cfg, mesh, cache_spec_tree)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,59 @@
+"""Ambient mesh for in-model sharding hints.
+
+Model code calls `shard_hint(x, 'axis', ...)` to constrain intermediate
+layouts (e.g. the MoE dispatch buffer). Outside a mesh context (unit tests,
+single-device smoke runs) hints are no-ops, so the same code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[name])
+
+
+def shard_hint(x, *spec):
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    Axis names absent from the active mesh are dropped (lets the same hint
+    serve single-pod and multi-pod meshes).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+
+    def _filter(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in mesh.axis_names)
+            return kept if kept else None
+        return entry if entry in mesh.axis_names else None
+
+    fspec = P(*[_filter(e) for e in spec])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fspec))

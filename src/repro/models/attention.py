@@ -1,0 +1,366 @@
+"""GQA attention: chunked-flash (online softmax) for train/prefill, cached decode.
+
+The chunked jnp implementation is the production path for the dry-run (it keeps
+peak memory O(S·chunk) instead of O(S^2)) and doubles as the oracle for the
+Pallas flash kernel (kernels/flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import axis_size, shard_hint
+from repro.models.layers import (COMPUTE_DTYPE, apply_rope, init_linear,
+                                 init_rmsnorm, linear, rms_norm)
+
+NEG_INF = -1e30
+BATCH = ("pod", "data")
+
+
+def _attn_axes(cfg):
+    """((q_heads, q_hd), (kv_heads, kv_hd)) hint axes — mirrors
+    launch.sharding.attn_layouts against the ambient mesh."""
+    tp = axis_size("model")
+    if tp <= 1 or not cfg.n_heads:
+        return (None, None), (None, None)
+    hd_ok = cfg.resolved_head_dim % tp == 0
+    if cfg.n_heads % tp == 0:
+        q = ("model", None)
+        kv = ("model", None) if cfg.n_kv_heads % tp == 0 else (None, None)
+        return q, kv
+    if hd_ok:
+        return (None, "model"), (None, "model")
+    return (None, None), (None, None)
+
+
+def _head_proj_init(key, d_model, n_heads, head_dim, bias, dtype):
+    """Weights kept 3-D [d_model, H, head_dim] so head/head_dim partition specs
+    apply directly (no reshape through a fused dim that breaks sharding)."""
+    w = (jax.random.normal(key, (d_model, n_heads, head_dim), jnp.float32)
+         / (d_model ** 0.5)).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((n_heads, head_dim), dtype)
+    return p
+
+
+def init_attention(key, cfg, *, cross=False, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _head_proj_init(k1, cfg.d_model, cfg.n_heads, hd, cfg.qkv_bias, dtype),
+        "wk": _head_proj_init(k2, cfg.d_model, cfg.n_kv_heads, hd, cfg.qkv_bias, dtype),
+        "wv": _head_proj_init(k3, cfg.d_model, cfg.n_kv_heads, hd, cfg.qkv_bias, dtype),
+        "wo": {"w": (jax.random.normal(k4, (cfg.n_heads, hd, cfg.d_model), jnp.float32)
+                     / ((cfg.n_heads * hd) ** 0.5)).astype(dtype)},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _head_proj(p, x):
+    y = jnp.einsum("bsd,dhk->bshk", x.astype(COMPUTE_DTYPE),
+                   p["w"].astype(COMPUTE_DTYPE))
+    if "b" in p:
+        y = y + p["b"].astype(COMPUTE_DTYPE)[None, None]
+    return y
+
+
+def _out_proj(p, o):
+    """o: [B,S,H,hd] -> [B,S,d]. bf16 out: its TP all-reduce runs at half
+    width (§Perf iteration 2); the MXU still accumulates f32 in-dot."""
+    return jnp.einsum("bshk,hkd->bsd", o, p["w"].astype(COMPUTE_DTYPE))
+
+
+def _project_qkv(p, x, kv_x, cfg, positions, kv_positions, *, rope):
+    q = _head_proj(p["wq"], x)
+    k = _head_proj(p["wk"], kv_x)
+    v = _head_proj(p["wv"], kv_x)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    # pin batch/head layout so SPMD propagation never falls back to
+    # replicating the batch dim inside the attention loops
+    (qh, qd), (kh, kd) = _attn_axes(cfg)
+    q = shard_hint(q, BATCH, None, qh, qd)
+    k = shard_hint(k, BATCH, None, kh, kd)
+    v = shard_hint(v, BATCH, None, kh, kd)
+    return q, k, v
+
+
+def _causal_bias(qi, ki, q_chunk, kv_chunk):
+    qp = qi * q_chunk + jnp.arange(q_chunk)
+    kp = ki * kv_chunk + jnp.arange(kv_chunk)
+    return jnp.where(kp[None, :] <= qp[:, None], 0.0, NEG_INF)   # [qc,kc]
+
+
+def _flash_chunks(x, n, c):
+    # [B,S,H,D] -> [n,B,c,H,D]
+    B, S, H, D = x.shape
+    return jnp.moveaxis(x.reshape(B, n, c, H, D), 1, 0)
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, h_ax):
+    """Returns (out [B,Sq,H,D], lse [B,H,Sq])."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / (D ** 0.5)
+    hint = shard_hint
+    qr = hint(_flash_chunks(q, nq, q_chunk), None, BATCH, None, h_ax, None)
+    kr = hint(_flash_chunks(k, nk, kv_chunk), None, BATCH, None, h_ax, None)
+    vr = hint(_flash_chunks(v, nk, kv_chunk), None, BATCH, None, h_ax, None)
+
+    def q_step(_, xs):
+        qi, qc = xs                                        # [B,qc,H,D]
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            ki, kc, vc = ys
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = hint(s, BATCH, h_ax, None, None)
+            if causal:
+                s = s + _causal_bias(qi, ki, q_chunk, kv_chunk)[None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(COMPUTE_DTYPE), vc,
+                preferred_element_type=jnp.float32)
+            acc = hint(acc, BATCH, h_ax, None, None)
+            return (m_new, l, acc), None
+
+        m0 = hint(jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+                  BATCH, h_ax, None)
+        l0 = hint(jnp.zeros((B, H, q_chunk), jnp.float32), BATCH, h_ax, None)
+        a0 = hint(jnp.zeros((B, H, q_chunk, D), jnp.float32),
+                  BATCH, h_ax, None, None)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kr, vr))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(COMPUTE_DTYPE)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))           # [B,H,qc]
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # outs: [nq,B,H,qc,D] -> [B,Sq,H,D];  lses: [nq,B,H,qc] -> [B,H,Sq]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal, q_chunk, kv_chunk, h_ax):
+    """Memory-efficient flash backward: recomputes p per tile (never saves the
+    O(S^2) probabilities — the jnp analogue of the fused-kernel backward)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / (D ** 0.5)
+    hint = shard_hint
+
+    qr = hint(_flash_chunks(q, nq, q_chunk), None, BATCH, None, h_ax, None)
+    kr = hint(_flash_chunks(k, nk, kv_chunk), None, BATCH, None, h_ax, None)
+    vr = hint(_flash_chunks(v, nk, kv_chunk), None, BATCH, None, h_ax, None)
+    dor = hint(_flash_chunks(do, nq, q_chunk), None, BATCH, None, h_ax, None)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = delta.transpose(0, 2, 1)                         # [B,H,Sq]
+    deltar = jnp.moveaxis(delta.reshape(B, H, nq, q_chunk), 2, 0)
+    lser = jnp.moveaxis(lse.reshape(B, H, nq, q_chunk), 2, 0)
+
+    dk0 = hint(jnp.zeros((B, Skv, H, D), jnp.float32), BATCH, None, h_ax, None)
+    dv0 = hint(jnp.zeros((B, Skv, H, D), jnp.float32), BATCH, None, h_ax, None)
+
+    def i_step(carry, xs):
+        dkf, dvf = carry
+        qi, qc, doi, Li, di = xs                             # Li/di: [B,H,qc]
+
+        def j_step(c2, ys):
+            dqi, dkf, dvf = c2
+            ki, kc, vc = ys
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                s = s + _causal_bias(qi, ki, q_chunk, kv_chunk)[None, None]
+            p = jnp.exp(s - Li[..., None])                   # [B,H,qc,kc]
+            p = hint(p, BATCH, h_ax, None, None)
+            pb = p.astype(COMPUTE_DTYPE)
+            dv_blk = jnp.einsum("bhqk,bqhd->bkhd", pb, doi,
+                                preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doi, vc,
+                            preferred_element_type=jnp.float32)
+            ds = (p * (dp - di[..., None]) * scale).astype(COMPUTE_DTYPE)
+            dqi = dqi + jnp.einsum("bhqk,bkhd->bqhd", ds, kc,
+                                   preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bhqk,bqhd->bkhd", ds, qc,
+                                preferred_element_type=jnp.float32)
+            start = ki * kv_chunk
+            old_k = jax.lax.dynamic_slice_in_dim(dkf, start, kv_chunk, axis=1)
+            dkf = jax.lax.dynamic_update_slice_in_dim(dkf, old_k + dk_blk,
+                                                      start, axis=1)
+            old_v = jax.lax.dynamic_slice_in_dim(dvf, start, kv_chunk, axis=1)
+            dvf = jax.lax.dynamic_update_slice_in_dim(dvf, old_v + dv_blk,
+                                                      start, axis=1)
+            return (dqi, dkf, dvf), None
+
+        dq0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        (dqi, dkf, dvf), _ = jax.lax.scan(j_step, (dq0, dkf, dvf),
+                                          (jnp.arange(nk), kr, vr))
+        return (dkf, dvf), dqi
+
+    (dk, dv), dqs = jax.lax.scan(i_step, (dk0, dv0),
+                                 (jnp.arange(nq), qr, dor, lser, deltar))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, H, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, q_chunk, kv_chunk, h_ax):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, h_ax)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, q_chunk, kv_chunk, h_ax):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, h_ax)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, q_chunk, kv_chunk, h_ax, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, do, causal, q_chunk, kv_chunk, h_ax)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, q_chunk=1024, kv_chunk=1024,
+                        hint_axes=(None, None)):
+    """Memory-efficient attention with a flash-style custom VJP.
+    q/k/v: [B,S,H,D] with H(q) == H(kv) — GQA callers expand KV first
+    (attention_block). O(S * D) residuals; probabilities are recomputed
+    tile-by-tile in the backward pass, exactly like the fused TPU kernel."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    assert k.shape[2] == H, ("flash core is ungrouped; expand KV heads first",
+                             q.shape, k.shape)
+    q_chunk = _fit_chunk(Sq, q_chunk)
+    kv_chunk = _fit_chunk(Skv, kv_chunk)
+    h_ax = hint_axes[0]
+    return _flash(q, k, v, causal, q_chunk, kv_chunk, h_ax)
+
+
+def _fit_chunk(S: int, c: int) -> int:
+    """Largest divisor of S that is <= c (handles Skv like 1600)."""
+    c = min(c, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def attention_block(p, x, *, cfg, positions, kv_x=None, kv_positions=None,
+                    causal=True, rope=True, q_chunk=1024, kv_chunk=1024):
+    """Full-sequence attention (train / prefill). Returns (y, (k, v)).
+
+    KV heads are expanded (and q-heads zero-padded) to a multiple of the
+    `model` axis before the flash loop, so the attention probability tiles —
+    the largest activations in the program — are ALWAYS sharded over `model`
+    regardless of GQA ratios (llama 64/8, arctic 56/8, smollm 15/5, ...).
+    The returned cache k/v stay in their compact [B,S,Hkv,hd] form.
+    """
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, x, kv_x, cfg, positions, kv_positions, rope=rope)
+    B, Sq = q.shape[0], q.shape[1]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    tp = axis_size("model")
+    Hp = -(-H // tp) * tp if tp > 1 else H
+    G = H // Hkv
+    qp = q
+    if Hp != H:
+        qp = jnp.concatenate(
+            [q, jnp.zeros((B, Sq, Hp - H, hd), q.dtype)], axis=2)
+    kv_map = jnp.minimum(jnp.arange(Hp) // G, Hkv - 1)
+    k_exp = jnp.take(k, kv_map, axis=2)
+    v_exp = jnp.take(v, kv_map, axis=2)
+    # flash tiles shard over padded q-heads; with KV kept head-replicated
+    # (GQA kv < tp) the expansion is a LOCAL slice — no resharding a2a.
+    qp = shard_hint(qp, BATCH, None, "model", None)
+    k_exp = shard_hint(k_exp, BATCH, None, "model", None)
+    v_exp = shard_hint(v_exp, BATCH, None, "model", None)
+    o = flash_attention_jnp(qp, k_exp, v_exp, causal=causal, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk, hint_axes=("model", None))
+    if Hp != H:
+        o = o[:, :, :H]
+    y = _out_proj(p["wo"], o)
+    return y, (k, v)
+
+
+def decode_attention(p, x, cache_k, cache_v, cache_len, *, cfg, rope=True,
+                     update_cache=True):
+    """One-token decode. x:[B,1,d]; cache_k/v:[B,Smax,Hkv,D]; cache_len scalar.
+
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    B, Smax = cache_k.shape[0], cache_k.shape[1]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, positions, positions, rope=rope)
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1)
+    Hkv, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    valid = jnp.arange(Smax)[None, None, None, None, :] <= cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", w, cache_v.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, cfg.n_heads, hd)
+    y = _out_proj(p["wo"], o)
+    return y, cache_k, cache_v
+
+
+def decode_cross_attention(p, x, cross_k, cross_v, n_cross, *, cfg):
+    """Decode-time cross attention over a fixed (precomputed) KV set."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = jnp.zeros((B, 1), jnp.int32)
+    q, _, _ = _project_qkv(p, x, x, cfg, pos, pos, rope=False)
+    Hkv, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cross_k.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    w = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", w, cross_v.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, cfg.n_heads, hd)
+    return _out_proj(p["wo"], o)
+
+
+def reference_attention(q, k, v, *, causal=True):
+    """O(S^2) oracle for tests."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+All params are plain pytrees (nested dicts of jnp arrays). Compute is bf16
+with f32 accumulation; master params keep their configured dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- init
+def _dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, bias=False, dtype=jnp.float32):
+    p = {"w": _dense_init(key, (d_in, d_out), fan_in=d_in, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    """bf16-native projection: the dot's internal accumulation is f32 on the
+    MXU, but inputs/outputs (and therefore fwd AND bwd cotangents — which
+    carry the TP all-reduces) stay bf16. Emitting f32 here doubled every
+    model-axis collective (EXPERIMENTS.md §Perf iterations 2-3)."""
+    y = jnp.einsum("...i,io->...o", x.astype(COMPUTE_DTYPE),
+                   p["w"].astype(COMPUTE_DTYPE))
+    if "b" in p:
+        y = y + p["b"].astype(COMPUTE_DTYPE)
+    return y
+
+
+linear_reduced = linear
+
+
+# ----------------------------------------------------------------- rmsnorm
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(COMPUTE_DTYPE)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies for rotary embeddings; [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                              # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # [...,S,1,D/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ swiglu
+def init_swiglu(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    g = linear(p["gate"], x)
+    u = linear(p["up"], x)
+    return linear_reduced(
+        p["down"], jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * u)
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return p["table"].astype(COMPUTE_DTYPE)[ids]
+
+
+def unembed(p, x, *, transpose=True):
+    """Project hidden states to logits. p is an embedding (tied) or linear."""
+    t = p["table"].astype(COMPUTE_DTYPE)
+    return jnp.einsum("...d,vd->...v", x, t, preferred_element_type=jnp.float32)

@@ -1,0 +1,146 @@
+"""Top-level LM: embeddings -> family stack -> final norm -> logits.
+
+Pure-functional API used by train_step / serve_step / dryrun:
+    init_params(cfg, key)                          -> params pytree
+    forward(params, cfg, batch, ...)               -> (logits, aux)
+    prefill(params, cfg, batch, ...)               -> (logits, cache)
+    decode_step(params, cfg, token, cache, length) -> (logits, cache)
+    loss_fn(params, cfg, batch, ...)               -> (loss, metrics)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.meshctx import shard_hint
+from repro.models.layers import (COMPUTE_DTYPE, embed, init_embedding,
+                                 init_rmsnorm, rms_norm, unembed)
+from repro.models.transformer import STACKS
+
+BATCH = ("pod", "data")
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------- init
+def init_params(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = _dtype(cfg)
+    p = {
+        "embed": init_embedding(k1, cfg.padded_vocab, cfg.d_model, dtype=dtype),
+        "stack": STACKS[cfg.family].init(k2, cfg, dtype=dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embedding(k3, cfg.padded_vocab, cfg.d_model, dtype=dtype)
+    return p
+
+
+def param_shapes(cfg):
+    """Shape pytree of init_params without allocating (used for 480B archs)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+    if active_only and cfg.n_experts:
+        expert_leaves = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(
+                lambda l: l, shapes["stack"]["layers"]["moe"]["experts"]))
+        esz = sum(int(np.prod(l.shape)) for l in expert_leaves)
+        total = total - esz + esz * cfg.top_k // cfg.n_experts
+    return total
+
+
+# ---------------------------------------------------------------- forward
+def _embed_inputs(params, cfg, batch):
+    if batch.get("embeds") is not None:
+        x = batch["embeds"].astype(COMPUTE_DTYPE)
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    x = shard_hint(x, BATCH, None, None)   # pin batch sharding of the stream
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def forward(params, cfg, batch, *, remat=False, with_cache=False,
+            q_chunk=1024, kv_chunk=1024, ssd_chunk=128):
+    """batch: {tokens|embeds, positions?, vision_embeds?}. Causal full-seq pass."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    stack = STACKS[cfg.family]
+    kw: dict[str, Any] = dict(positions=positions, remat=remat,
+                              with_cache=with_cache, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+    if cfg.family == "vlm":
+        kw["vision_embeds"] = batch["vision_embeds"].astype(COMPUTE_DTYPE)
+    x, aux, cache = stack.seq(params["stack"], x, cfg, **kw)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x)
+    return (logits, aux, cache) if with_cache else (logits, aux)
+
+
+def prefill(params, cfg, batch, **kw):
+    logits, _, cache = forward(params, cfg, batch, with_cache=True, **kw)
+    return logits, cache
+
+
+def decode_step(params, cfg, token, cache, cache_len, *, embeds=None):
+    """One-token decode. token:[B,1] int32 (or embeds:[B,1,d]); cache_len scalar."""
+    if embeds is not None:
+        x = embeds.astype(COMPUTE_DTYPE)
+    else:
+        x = embed(params["embed"], token)
+    stack = STACKS[cfg.family]
+    x, cache = stack.step(params["stack"], x, cache, cache_len, cfg)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x)
+    return logits, cache
+
+
+def make_decode_cache_spec(cfg, B, S):
+    return STACKS[cfg.family].cache_spec(cfg, B, S)
+
+
+def init_decode_cache(cfg, B, S):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  make_decode_cache_spec(cfg, B, S))
+
+
+# ------------------------------------------------------------------- loss
+def loss_fn(params, cfg, batch, *, remat=True, aux_weight=0.01,
+            q_chunk=1024, kv_chunk=1024, ssd_chunk=128):
+    """Next-token cross-entropy; batch needs `labels` [B,S] (-100 = ignore)."""
+    logits, aux = forward(params, cfg, batch, remat=remat,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    safe = jnp.where(valid, labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # gold logit via fused compare-select-reduce: with vocab sharded over
+    # `model`, this reduces to a partial sum + tiny all-reduce — never a
+    # gather/all-gather of the [B,S,V] logits.
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=safe.dtype)
+    onehot = (safe[..., None] == vocab_iota).astype(logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = nll.sum() / denom
+    total = ce + aux_weight * aux
+    return total, {"loss": total, "ce": ce, "aux": aux,
+                   "tokens": denom.astype(jnp.float32)}

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN: top-k routing with GROUP-LOCAL sort-based
+capacity dispatch.
+
+Dispatch is per-group (group = one sequence): tokens are argsorted by expert
+id WITHIN their group, bucketed into a [B, E, C, d] buffer, and the buffer is
+resharded batch->expert (one all-to-all under SPMD — the canonical MoE
+dispatch collective) before the batched expert matmuls, which then run fully
+aligned with the expert-sharded weights.
+
+The earlier global-sort formulation sorted/gathered across the whole token
+set, which the SPMD partitioner could only realize by replicating [T, d]
+activations on every device — the arctic-480b baseline was collective-bound
+at 605 s/step because of it (EXPERIMENTS.md §Perf hillclimb A).
+
+Supports: shared experts (deepseek-moe), dense residual path (arctic),
+load-balancing aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import shard_hint
+from repro.models.layers import COMPUTE_DTYPE, _dense_init, init_swiglu, swiglu
+
+BATCH = ("pod", "data")
+FSDP_AX = "data"
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(k1, (d, E), fan_in=d, dtype=jnp.float32),
+        "experts": {
+            "gate": _dense_init(k2, (E, d, f), fan_in=d, dtype=dtype),
+            "up": _dense_init(k3, (E, d, f), fan_in=d, dtype=dtype),
+            "down": _dense_init(k4, (E, f, d), fan_in=f, dtype=dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_swiglu(k5, d, cfg.n_shared_experts * f, dtype=dtype)
+    if cfg.dense_residual:
+        p["dense"] = init_swiglu(k6, d, cfg.dense_d_ff, dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)                          # round up to 8
+
+
+def moe_ffn(p, x, cfg, *, return_aux=True):
+    """x: [B,S,d] -> (y, aux_loss). Groups = batch rows."""
+    Bb, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    xf = x.reshape(Bb, S, d)
+
+    logits = jnp.einsum("bsd,de->bse", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # [B,S,E]
+    top_w, top_e = jax.lax.top_k(probs, k)                  # [B,S,k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- group-local dispatch (no cross-group communication) ----------------
+    e_flat = top_e.reshape(Bb, S * k)                       # [B,S*k]
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(e_flat, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    seg_pos = jnp.arange(S * k)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)
+    valid = seg_pos < C
+    slot = jnp.where(valid, sorted_e * C + seg_pos, E * C)  # overflow row
+
+    tok_of_assign = order // k                              # [B,S*k]
+    gathered = jnp.take_along_axis(
+        xf.astype(COMPUTE_DTYPE), tok_of_assign[..., None], axis=1)
+    gathered = jnp.where(valid[..., None], gathered, 0)
+
+    def scatter_row(slots, vals):
+        return jnp.zeros((E * C + 1, d), COMPUTE_DTYPE).at[slots].set(vals)
+
+    buf = jax.vmap(scatter_row)(slot, gathered)[:, :-1]     # [B,E*C,d]
+    buf = buf.reshape(Bb, E, C, d)
+    # batch-sharded -> expert-sharded: THE MoE all-to-all
+    buf = shard_hint(buf, BATCH, "model", None, None)
+    # merge (B,C) so the expert matmuls are plain 3-D batched dots; tokens
+    # replicate over `data` inside the expert block — the expert weights
+    # are Megatron col/row-parallel over `data` (no ZeRO re-gathers), and
+    # the row-parallel all-reduce below carries the partial sums back
+    buf = buf.transpose(1, 0, 2, 3).reshape(E, Bb * C, d)
+    buf = shard_hint(buf, "model", None, None)
+
+    # ---- expert computation (aligned with E-sharded weights) ----------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["gate"].astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"].astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(COMPUTE_DTYPE)
+    h = shard_hint(h, "model", None, FSDP_AX)               # col-parallel out
+    out = jnp.einsum("ecf,efd->ecd", h,
+                     p["experts"]["down"].astype(COMPUTE_DTYPE))
+    out = out.reshape(E, Bb, C, d).transpose(1, 0, 2, 3)    # [B,E,C,d]
+    out = shard_hint(out, BATCH, None, None, None)          # combine a2a back
+
+    # ---- combine -------------------------------------------------------------
+    out_flat = jnp.concatenate(
+        [out.reshape(Bb, E * C, d),
+         jnp.zeros((Bb, 1, d), COMPUTE_DTYPE)], axis=1)     # [B,E*C+1,d]
+    y_sorted = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    inv = jnp.argsort(order, axis=-1)
+    y_assign = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    y_assign = y_assign.reshape(Bb, S, k, d)
+    y = jnp.einsum("bskd,bsk->bsd", y_assign.astype(jnp.float32),
+                   top_w.astype(jnp.float32))
+
+    y = y.astype(COMPUTE_DTYPE)
+    y = shard_hint(y, BATCH, None, None)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x)
+    if "dense" in p:
+        y = y + swiglu(p["dense"], x)
+
+    aux = jnp.array(0.0, jnp.float32)
+    if return_aux:
+        # Switch-style load-balance loss: E * sum_e f_e * P_e
+        assign_onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # [B,S,k,E]
+        f_e = assign_onehot.sum((0, 1, 2)) / (Bb * S * k)
+        P_e = probs.mean((0, 1))
+        aux = E * jnp.sum(f_e * P_e)
+    return y, aux

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul form.
+
+The chunked algorithm (Mamba2 paper §6) is MXU-friendly: intra-chunk work is
+batched matmuls, inter-chunk work is an O(S/Q) recurrence, fused here into a
+single lax.scan so peak memory is O(chunk^2), independent of S (needed for
+the 32k prefill and 500k long-context shapes).
+
+Projections and conv are stored SPLIT (z / x / B / C / dt) rather than fused:
+each piece then has a clean partition spec — x and dt shard over SSM heads
+(`model` axis), B/C are group-shared (ngroups=1) and stay replicated.
+
+This jnp implementation is the production path for dry-runs and the oracle
+for the Pallas `ssd_scan` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import axis_size, shard_hint
+from repro.models.layers import (COMPUTE_DTYPE, init_linear, init_rmsnorm,
+                                 linear, linear_reduced, rms_norm)
+
+BATCH = ("pod", "data")
+
+
+def _ssm_head_axis(n_heads: int):
+    tp = axis_size("model")
+    return "model" if (tp > 1 and n_heads % tp == 0) else None
+
+
+# ----------------------------------------------------------------- init
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": init_linear(ks[0], cfg.d_model, d_in, dtype=dtype),
+        "wx": init_linear(ks[1], cfg.d_model, d_in, dtype=dtype),
+        "wB": init_linear(ks[2], cfg.d_model, N, dtype=dtype),
+        "wC": init_linear(ks[3], cfg.d_model, N, dtype=dtype),
+        "wdt": init_linear(ks[4], cfg.d_model, H, dtype=dtype),
+        "conv_x": {"w": (jax.random.normal(ks[5], (K, d_in), jnp.float32) / K).astype(dtype),
+                   "b": jnp.zeros((d_in,), dtype)},
+        "conv_B": {"w": (jax.random.normal(ks[6], (K, N), jnp.float32) / K).astype(dtype),
+                   "b": jnp.zeros((N,), dtype)},
+        "conv_C": {"w": (jax.random.normal(ks[7], (K, N), jnp.float32) / K).astype(dtype),
+                   "b": jnp.zeros((N,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.geomspace(1e-3, 1e-1, H))).astype(dtype),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": init_linear(ks[4], d_in, cfg.d_model, dtype=dtype),
+    }
+
+
+# ------------------------------------------------------------ SSD core
+def ssd_chunked(x, dt, A, B, C, D, *, chunk=128, initial_state=None):
+    """Chunked SSD fused scan. x:[b,s,h,p] dt:[b,s,h] (>=0) A:[h] (<0)
+    B/C:[b,s,n] D:[h].  Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # [nc, b, chunk, ...] so lax.scan walks chunks.
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, h, p), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0).astype(jnp.float32)
+    Bc = jnp.moveaxis(B.reshape(b, nc, chunk, n), 1, 0).astype(jnp.float32)
+    Cc = jnp.moveaxis(C.reshape(b, nc, chunk, n), 1, 0).astype(jnp.float32)
+
+    h_ax = _ssm_head_axis(h)
+    xc = shard_hint(xc, None, BATCH, None, h_ax, None)
+    dtc = shard_hint(dtc, None, BATCH, None, h_ax)
+
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]   # [l,s]
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    h0 = shard_hint(h0, BATCH, h_ax, None, None)
+
+    def step(state, ys):
+        xq, dtq, Bq, Cq = ys              # [b,q,h,p] [b,q,h] [b,q,n] [b,q,n]
+        dA = dtq * A                       # [b,q,h] <= 0
+        cs = jnp.cumsum(dA, axis=1)        # inclusive
+        total = cs[:, -1]                  # [b,h]
+        xdt = xq * dtq[..., None]          # [b,q,h,p]
+
+        # intra-chunk: masked decay matmul
+        scores = jnp.einsum("bln,bsn->bls", Cq, Bq)                  # [b,l,s]
+        diff = cs[:, :, None, :] - cs[:, None, :, :]                 # [b,l,s,h]
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        y = jnp.einsum("bls,blsh,bshp->blhp", scores, L, xdt)
+
+        # contribution of the carried state
+        out_decay = jnp.exp(cs)                                      # [b,q,h]
+        y = y + jnp.einsum("bln,bhpn,blh->blhp", Cq, state, out_decay)
+
+        # state update
+        decay_states = jnp.exp(total[:, None] - cs)                  # [b,q,h]
+        upd = jnp.einsum("bsh,bshp,bsn->bhpn", decay_states, xdt, Bq)
+        state = state * jnp.exp(total)[:, :, None, None] + upd
+        state = shard_hint(state, BATCH, h_ax, None, None)
+
+        y = y + D[None, None, :, None] * xq
+        return state, y.astype(COMPUTE_DTYPE)
+
+    final, ys = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_recurrent_reference(x, dt, A, B, C, D, *, initial_state=None):
+    """Step-by-step oracle (tests only)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(hidden, ys):
+        xt, dtt, Bt, Ct = ys
+        decay = jnp.exp(dtt * A)                            # [b,h]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        hidden = hidden * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hidden, Ct) + D[None, :, None] * xt
+        return hidden, yt
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(COMPUTE_DTYPE), final
+
+
+# ----------------------------------------------------------- full block
+def _causal_conv(x, conv, *, tail=None):
+    """Depthwise causal conv + silu. x:[b,s,c]; conv.w:[k,c]. tail:[b,k-1,c]."""
+    w = conv["w"].astype(COMPUTE_DTYPE)
+    bvec = conv["b"].astype(COMPUTE_DTYPE)
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    padded = jnp.concatenate([tail, x], axis=1)
+    out = sum(padded[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_tail = padded[:, -(k - 1):] if k > 1 else tail
+    out = jax.nn.silu((out + bvec[None, None]).astype(jnp.float32))
+    return out.astype(COMPUTE_DTYPE), new_tail
+
+
+def _project(p, u, cfg):
+    z = linear(p["wz"], u)
+    x = linear(p["wx"], u)
+    B = linear(p["wB"], u)
+    C = linear(p["wC"], u)
+    dt_raw = linear(p["wdt"], u)
+    return z, x, B, C, dt_raw
+
+
+def mamba2_seq(p, u, *, cfg, initial_state=None, conv_tails=None, chunk=128):
+    """Full-sequence Mamba2 block. u:[b,s,d_model] ->
+    (y, (ssm_state, (tail_x, tail_B, tail_C)))."""
+    b, s, _ = u.shape
+    H, P = cfg.n_ssm_heads, cfg.ssm_headdim
+    z, x, B, C, dt_raw = _project(p, u, cfg)
+    tx, tB, tC = conv_tails if conv_tails is not None else (None, None, None)
+    x, tx = _causal_conv(x, p["conv_x"], tail=tx)
+    B, tB = _causal_conv(B, p["conv_B"], tail=tB)
+    C, tC = _causal_conv(C, p["conv_C"], tail=tC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(x.reshape(b, s, H, P), dt, A, B, C,
+                           p["D"].astype(jnp.float32), chunk=chunk,
+                           initial_state=initial_state)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 cfg.norm_eps)
+    return linear_reduced(p["out_proj"], y), (final.astype(COMPUTE_DTYPE),
+                                              (tx, tB, tC))
+
+
+def mamba2_step(p, u, ssm_state, conv_tails, *, cfg):
+    """One-token decode. u:[b,1,d_model]."""
+    b = u.shape[0]
+    H, P = cfg.n_ssm_heads, cfg.ssm_headdim
+    z, x, B, C, dt_raw = _project(p, u, cfg)
+    tx, tB, tC = conv_tails
+    x, tx = _causal_conv(x, p["conv_x"], tail=tx)
+    B, tB = _causal_conv(B, p["conv_B"], tail=tB)
+    C, tC = _causal_conv(C, p["conv_C"], tail=tC)
+    x = x[:, 0].reshape(b, H, P).astype(jnp.float32)
+    B = B[:, 0].astype(jnp.float32)
+    C = C[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                 # [b,H]
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B)
+    new_state = ssm_state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C) + p["D"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(b, 1, cfg.d_inner).astype(COMPUTE_DTYPE)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 cfg.norm_eps)
+    return linear_reduced(p["out_proj"], y), (new_state.astype(COMPUTE_DTYPE),
+                                              (tx, tB, tC))

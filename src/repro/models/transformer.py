@@ -1,0 +1,483 @@
+"""Per-family layer stacks, composed as lax.scan over stacked params.
+
+Every family exposes three functions:
+  init_stack(key, cfg)             -> stacked param pytree
+  stack_seq(p, x, cfg, ...)        -> (x, aux_loss, cache)      # train / prefill
+  stack_step(p, x, cache, len, ..) -> (x, new_cache)            # one-token decode
+plus `cache_spec(cfg, B, S)` giving the decode-cache ShapeDtypeStructs.
+
+Scanning over stacked params keeps the HLO O(1) in depth — a 100-layer,
+512-device SPMD program lowers to a handful of while-loops. Heterogeneous
+stacks (zamba2, llama-vision) scan over their repeating pattern unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import (attention_block, decode_attention,
+                                    decode_cross_attention, init_attention)
+from repro.models.layers import (COMPUTE_DTYPE, init_rmsnorm, init_swiglu,
+                                 rms_norm, swiglu)
+from repro.models.moe import init_moe, moe_ffn
+
+SDS = jax.ShapeDtypeStruct
+
+
+# =============================================================== dense block
+def init_dense_block(key, cfg, *, d_ff=None, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype=dtype),
+        "ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": init_swiglu(k2, cfg.d_model, d_ff or cfg.d_ff, dtype=dtype),
+    }
+
+
+def dense_block_seq(p, x, cfg, positions, q_chunk, kv_chunk):
+    h, kv = attention_block(p["attn"], rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                            cfg=cfg, positions=positions,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + h
+    x = x + swiglu(p["ffn"], rms_norm(p["ffn_norm"], x, cfg.norm_eps))
+    return x, kv
+
+
+def dense_block_step(p, x, ck, cv, cache_len, cfg):
+    h, ck, cv = decode_attention(p["attn"], rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                                 ck, cv, cache_len, cfg=cfg)
+    x = x + h
+    x = x + swiglu(p["ffn"], rms_norm(p["ffn_norm"], x, cfg.norm_eps))
+    return x, ck, cv
+
+
+# ================================================================= moe block
+def init_moe_block(key, cfg, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype=dtype),
+        "ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "moe": init_moe(k2, cfg, dtype=dtype),
+    }
+
+
+def moe_block_seq(p, x, cfg, positions, q_chunk, kv_chunk):
+    h, kv = attention_block(p["attn"], rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                            cfg=cfg, positions=positions,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + h
+    y, aux = moe_ffn(p["moe"], rms_norm(p["ffn_norm"], x, cfg.norm_eps), cfg)
+    x = x + y
+    return x, kv, aux
+
+
+def moe_block_step(p, x, ck, cv, cache_len, cfg):
+    h, ck, cv = decode_attention(p["attn"], rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                                 ck, cv, cache_len, cfg=cfg)
+    x = x + h
+    y, _ = moe_ffn(p["moe"], rms_norm(p["ffn_norm"], x, cfg.norm_eps), cfg,
+                   return_aux=False)
+    x = x + y
+    return x, ck, cv
+
+
+# ================================================================ ssm block
+def init_ssm_block(key, cfg, dtype=jnp.float32):
+    return {"norm": init_rmsnorm(cfg.d_model, dtype),
+            "mamba": ssm.init_mamba2(key, cfg, dtype=dtype)}
+
+
+def ssm_block_seq(p, x, cfg, ssd_chunk=128):
+    y, _ = ssm.mamba2_seq(p["mamba"], rms_norm(p["norm"], x, cfg.norm_eps),
+                          cfg=cfg, chunk=ssd_chunk)
+    return x + y
+
+
+def ssm_block_seq_with_state(p, x, cfg, ssd_chunk=128):
+    y, (st, tails) = ssm.mamba2_seq(p["mamba"], rms_norm(p["norm"], x, cfg.norm_eps),
+                                    cfg=cfg, chunk=ssd_chunk)
+    return x + y, st, tails
+
+
+def ssm_block_step(p, x, st, tails, cfg):
+    y, (st, tails) = ssm.mamba2_step(p["mamba"], rms_norm(p["norm"], x, cfg.norm_eps),
+                                     st, tails, cfg=cfg)
+    return x + y, st, tails
+
+
+# ---------------------------------------------------------------------------
+def _stacked_init(init_fn, key, n, *args, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kw))(keys)
+
+
+def _maybe_remat(fn, remat):
+    return jax.checkpoint(fn) if remat else fn
+
+
+# ===========================================================================
+# Family: dense / audio  (uniform stack of dense blocks)
+# ===========================================================================
+class DenseStack:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        return {"layers": _stacked_init(init_dense_block, key, cfg.n_layers,
+                                        cfg, dtype=dtype)}
+
+    @staticmethod
+    def seq(p, x, cfg, *, positions, remat=False, with_cache=False,
+            q_chunk=1024, kv_chunk=1024, **_):
+        def body(carry, layer_p):
+            y, kv = dense_block_seq(layer_p, carry, cfg, positions, q_chunk, kv_chunk)
+            return y, kv if with_cache else None
+
+        x, kvs = jax.lax.scan(_maybe_remat(body, remat), x, p["layers"])
+        cache = None
+        if with_cache:
+            cache = {"k": kvs[0].astype(COMPUTE_DTYPE), "v": kvs[1].astype(COMPUTE_DTYPE)}
+        return x, jnp.array(0.0, jnp.float32), cache
+
+    @staticmethod
+    def step(p, x, cache, cache_len, cfg, **_):
+        def body(carry, xs):
+            layer_p, ck, cv = xs
+            y, ck, cv = dense_block_step(layer_p, carry, ck, cv, cache_len, cfg)
+            return y, (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(body, x, (p["layers"], cache["k"], cache["v"]))
+        return x, {"k": cks, "v": cvs}
+
+    @staticmethod
+    def cache_spec(cfg, B, S):
+        hd = cfg.resolved_head_dim
+        return {"k": SDS((cfg.n_layers, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "v": SDS((cfg.n_layers, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE)}
+
+
+# ===========================================================================
+# Family: moe  (optional unstacked dense first layer — deepseek-moe)
+# ===========================================================================
+class MoeStack:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        p = {"layers": _stacked_init(init_moe_block, k1, n_moe, cfg, dtype=dtype)}
+        if cfg.first_dense_layers:
+            p["first"] = _stacked_init(init_dense_block, k2, cfg.first_dense_layers,
+                                       cfg, d_ff=cfg.dense_d_ff, dtype=dtype)
+        return p
+
+    @staticmethod
+    def seq(p, x, cfg, *, positions, remat=False, with_cache=False,
+            q_chunk=1024, kv_chunk=1024, **_):
+        first_cache = None
+        if "first" in p:
+            def fbody(carry, layer_p):
+                y, kv = dense_block_seq(layer_p, carry, cfg, positions, q_chunk, kv_chunk)
+                return y, kv if with_cache else None
+            x, fkvs = jax.lax.scan(_maybe_remat(fbody, remat), x, p["first"])
+            if with_cache:
+                first_cache = {"k": fkvs[0].astype(COMPUTE_DTYPE),
+                               "v": fkvs[1].astype(COMPUTE_DTYPE)}
+
+        def body(carry, layer_p):
+            x, aux = carry
+            y, kv, a = moe_block_seq(layer_p, x, cfg, positions, q_chunk, kv_chunk)
+            return (y, aux + a), kv if with_cache else None
+
+        (x, aux), kvs = jax.lax.scan(_maybe_remat(body, remat),
+                                     (x, jnp.array(0.0, jnp.float32)), p["layers"])
+        cache = None
+        if with_cache:
+            cache = {"k": kvs[0].astype(COMPUTE_DTYPE), "v": kvs[1].astype(COMPUTE_DTYPE)}
+            if first_cache is not None:
+                cache = {"moe": cache, "first": first_cache}
+            else:
+                cache = {"moe": cache}
+        return x, aux, cache
+
+    @staticmethod
+    def step(p, x, cache, cache_len, cfg, **_):
+        new_first = None
+        if "first" in p:
+            def fbody(carry, xs):
+                layer_p, ck, cv = xs
+                y, ck, cv = dense_block_step(layer_p, carry, ck, cv, cache_len, cfg)
+                return y, (ck, cv)
+            x, (fk, fv) = jax.lax.scan(fbody, x, (p["first"], cache["first"]["k"],
+                                                  cache["first"]["v"]))
+            new_first = {"k": fk, "v": fv}
+
+        def body(carry, xs):
+            layer_p, ck, cv = xs
+            y, ck, cv = moe_block_step(layer_p, carry, ck, cv, cache_len, cfg)
+            return y, (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(body, x, (p["layers"], cache["moe"]["k"],
+                                               cache["moe"]["v"]))
+        out = {"moe": {"k": cks, "v": cvs}}
+        if new_first is not None:
+            out["first"] = new_first
+        return x, out
+
+    @staticmethod
+    def cache_spec(cfg, B, S):
+        hd = cfg.resolved_head_dim
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        spec = {"moe": {"k": SDS((n_moe, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                        "v": SDS((n_moe, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE)}}
+        if cfg.first_dense_layers:
+            spec["first"] = {
+                "k": SDS((cfg.first_dense_layers, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "v": SDS((cfg.first_dense_layers, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE)}
+        return spec
+
+
+# ===========================================================================
+# Family: ssm  (mamba2, attention-free)
+# ===========================================================================
+class SsmStack:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        return {"layers": _stacked_init(init_ssm_block, key, cfg.n_layers,
+                                        cfg, dtype=dtype)}
+
+    @staticmethod
+    def seq(p, x, cfg, *, remat=False, with_cache=False, ssd_chunk=128, **_):
+        def body(carry, layer_p):
+            if with_cache:
+                y, st, tails = ssm_block_seq_with_state(layer_p, carry, cfg, ssd_chunk)
+                return y, (st, tails)
+            return ssm_block_seq(layer_p, carry, cfg, ssd_chunk), None
+
+        x, caches = jax.lax.scan(_maybe_remat(body, remat), x, p["layers"])
+        cache = None
+        if with_cache:
+            cache = {"ssm": caches[0], "conv": caches[1]}
+        return x, jnp.array(0.0, jnp.float32), cache
+
+    @staticmethod
+    def step(p, x, cache, cache_len, cfg, **_):
+        def body(carry, xs):
+            layer_p, st, tails = xs
+            y, st, tails = ssm_block_step(layer_p, carry, st, tails, cfg)
+            return y, (st, tails)
+
+        x, (sts, tails) = jax.lax.scan(body, x, (p["layers"], cache["ssm"], cache["conv"]))
+        return x, {"ssm": sts, "conv": tails}
+
+    @staticmethod
+    def cache_spec(cfg, B, S):
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        L, K = cfg.n_layers, cfg.ssm_conv
+        return {"ssm": SDS((L, B, H, P, N), COMPUTE_DTYPE),
+                "conv": (SDS((L, B, K - 1, cfg.d_inner), COMPUTE_DTYPE),
+                         SDS((L, B, K - 1, N), COMPUTE_DTYPE),
+                         SDS((L, B, K - 1, N), COMPUTE_DTYPE))}
+
+
+# ===========================================================================
+# Family: hybrid (zamba2) — mamba2 backbone + ONE shared attn/FFN block
+# applied after every `shared_attn_interval` layers.
+# ===========================================================================
+class HybridStack:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        k1, k2, k3 = jax.random.split(key, 3)
+        I = cfg.shared_attn_interval
+        U = cfg.n_layers // I
+        keys = jax.random.split(k1, U)
+        units = jax.vmap(
+            lambda k: _stacked_init(init_ssm_block, k, I, cfg, dtype=dtype))(keys)
+        return {"units": units,                       # [U, I, ...]
+                "shared": init_dense_block(k2, cfg, dtype=dtype)}
+
+    @staticmethod
+    def seq(p, x, cfg, *, positions, remat=False, with_cache=False,
+            q_chunk=1024, kv_chunk=1024, ssd_chunk=128, **_):
+        shared = p["shared"]
+
+        def unit(carry, unit_p):
+            x = carry
+
+            def inner(c, lp):
+                if with_cache:
+                    y, st, tail = ssm_block_seq_with_state(lp, c, cfg, ssd_chunk)
+                    return y, (st, tail)
+                return ssm_block_seq(lp, c, cfg, ssd_chunk), None
+
+            # nested remat: unit backward holds ONE mamba layer at a time
+            x, inner_caches = jax.lax.scan(_maybe_remat(inner, remat), x, unit_p)
+            x, kv = dense_block_seq(shared, x, cfg, positions, q_chunk, kv_chunk)
+            out = (inner_caches, kv) if with_cache else None
+            return x, out
+
+        x, outs = jax.lax.scan(_maybe_remat(unit, remat), x, p["units"])
+        cache = None
+        if with_cache:
+            (inner_caches, kvs) = outs
+            cache = {"ssm": inner_caches[0], "conv": inner_caches[1],
+                     "k": kvs[0].astype(COMPUTE_DTYPE), "v": kvs[1].astype(COMPUTE_DTYPE)}
+        return x, jnp.array(0.0, jnp.float32), cache
+
+    @staticmethod
+    def step(p, x, cache, cache_len, cfg, **_):
+        shared = p["shared"]
+
+        def unit(carry, xs):
+            unit_p, sts, tails, ck, cv = xs
+            x = carry
+
+            def inner(c, ys):
+                lp, st, tl = ys
+                y, st, tl = ssm_block_step(lp, c, st, tl, cfg)
+                return y, (st, tl)
+
+            x, (sts, tails) = jax.lax.scan(inner, x, (unit_p, sts, tails))
+            x, ck, cv = dense_block_step(shared, x, ck, cv, cache_len, cfg)
+            return x, (sts, tails, ck, cv)
+
+        x, (sts, tails, cks, cvs) = jax.lax.scan(
+            unit, x, (p["units"], cache["ssm"], cache["conv"], cache["k"], cache["v"]))
+        return x, {"ssm": sts, "conv": tails, "k": cks, "v": cvs}
+
+    @staticmethod
+    def cache_spec(cfg, B, S):
+        I = cfg.shared_attn_interval
+        U = cfg.n_layers // I
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        K = cfg.ssm_conv
+        hd = cfg.resolved_head_dim
+        return {"ssm": SDS((U, I, B, H, P, N), COMPUTE_DTYPE),
+                "conv": (SDS((U, I, B, K - 1, cfg.d_inner), COMPUTE_DTYPE),
+                         SDS((U, I, B, K - 1, N), COMPUTE_DTYPE),
+                         SDS((U, I, B, K - 1, N), COMPUTE_DTYPE)),
+                "k": SDS((U, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "v": SDS((U, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE)}
+
+
+# ===========================================================================
+# Family: vlm (llama-3.2-vision) — units of (interval-1) self layers + 1
+# cross-attention layer over precomputed vision-patch embeddings.
+# ===========================================================================
+def init_cross_block(key, cfg, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "cross_norm": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": init_attention(k1, cfg, cross=True, dtype=dtype),
+        "attn_gate": jnp.zeros((1,), dtype),
+        "ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+        "ffn_gate": jnp.zeros((1,), dtype),
+    }
+
+
+def cross_block_seq(p, x, vision, cfg, positions):
+    h, kv = attention_block(p["cross_attn"], rms_norm(p["cross_norm"], x, cfg.norm_eps),
+                            cfg=cfg, positions=positions, kv_x=vision,
+                            kv_positions=jnp.zeros(vision.shape[:2], jnp.int32),
+                            causal=False, rope=False,
+                            q_chunk=1024, kv_chunk=min(1024, vision.shape[1]))
+    x = x + jnp.tanh(p["attn_gate"].astype(jnp.float32)).astype(COMPUTE_DTYPE) * h
+    f = swiglu(p["ffn"], rms_norm(p["ffn_norm"], x, cfg.norm_eps))
+    x = x + jnp.tanh(p["ffn_gate"].astype(jnp.float32)).astype(COMPUTE_DTYPE) * f
+    return x, kv
+
+
+def cross_block_step(p, x, cross_k, cross_v, cfg):
+    h = decode_cross_attention(p["cross_attn"],
+                               rms_norm(p["cross_norm"], x, cfg.norm_eps),
+                               cross_k, cross_v, cross_k.shape[1], cfg=cfg)
+    x = x + jnp.tanh(p["attn_gate"].astype(jnp.float32)).astype(COMPUTE_DTYPE) * h
+    f = swiglu(p["ffn"], rms_norm(p["ffn_norm"], x, cfg.norm_eps))
+    x = x + jnp.tanh(p["ffn_gate"].astype(jnp.float32)).astype(COMPUTE_DTYPE) * f
+    return x
+
+
+class VlmStack:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        I = cfg.cross_attn_interval
+        U = cfg.n_layers // I
+        k1, k2 = jax.random.split(key)
+        keys = jax.random.split(k1, U)
+        self_units = jax.vmap(
+            lambda k: _stacked_init(init_dense_block, k, I - 1, cfg, dtype=dtype))(keys)
+        cross = _stacked_init(init_cross_block, k2, U, cfg, dtype=dtype)
+        return {"self_units": self_units, "cross": cross}     # [U, I-1, ...], [U, ...]
+
+    @staticmethod
+    def seq(p, x, cfg, *, positions, vision_embeds, remat=False, with_cache=False,
+            q_chunk=1024, kv_chunk=1024, **_):
+        def unit(carry, xs):
+            unit_p, cross_p = xs
+            x = carry
+
+            def inner(c, lp):
+                y, kv = dense_block_seq(lp, c, cfg, positions, q_chunk, kv_chunk)
+                return y, kv if with_cache else None
+
+            # nested remat: unit backward holds ONE layer's internals
+            x, kvs = jax.lax.scan(_maybe_remat(inner, remat), x, unit_p)
+            x, ckv = cross_block_seq(cross_p, x, vision_embeds, cfg, positions)
+            out = (kvs, ckv) if with_cache else None
+            return x, out
+
+        x, outs = jax.lax.scan(_maybe_remat(unit, remat), x,
+                               (p["self_units"], p["cross"]))
+        cache = None
+        if with_cache:
+            kvs, ckvs = outs
+            cache = {"k": kvs[0].astype(COMPUTE_DTYPE), "v": kvs[1].astype(COMPUTE_DTYPE),
+                     "cross_k": ckvs[0].astype(COMPUTE_DTYPE),
+                     "cross_v": ckvs[1].astype(COMPUTE_DTYPE)}
+        return x, jnp.array(0.0, jnp.float32), cache
+
+    @staticmethod
+    def step(p, x, cache, cache_len, cfg, **_):
+        def unit(carry, xs):
+            unit_p, cross_p, cks, cvs, crk, crv = xs
+            x = carry
+
+            def inner(c, ys):
+                lp, ck, cv = ys
+                y, ck, cv = dense_block_step(lp, c, ck, cv, cache_len, cfg)
+                return y, (ck, cv)
+
+            x, (cks, cvs) = jax.lax.scan(inner, x, (unit_p, cks, cvs))
+            x = cross_block_step(cross_p, x, crk, crv, cfg)
+            return x, (cks, cvs)
+
+        x, (cks, cvs) = jax.lax.scan(
+            unit, x, (p["self_units"], p["cross"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        return x, {"k": cks, "v": cvs,
+                   "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+    @staticmethod
+    def cache_spec(cfg, B, S):
+        I = cfg.cross_attn_interval
+        U = cfg.n_layers // I
+        hd = cfg.resolved_head_dim
+        Tv = cfg.n_vision_tokens
+        return {"k": SDS((U, I - 1, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "v": SDS((U, I - 1, B, S, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "cross_k": SDS((U, B, Tv, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+                "cross_v": SDS((U, B, Tv, cfg.n_kv_heads, hd), COMPUTE_DTYPE)}
+
+
+STACKS: dict[str, Any] = {
+    "dense": DenseStack,
+    "audio": DenseStack,
+    "moe": MoeStack,
+    "ssm": SsmStack,
+    "hybrid": HybridStack,
+    "vlm": VlmStack,
+}

@@ -1,0 +1,75 @@
+"""AdamW with global-norm clipping, fully sharded (ZeRO: moments inherit the
+param partition specs), plus warmup-cosine schedule."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(hp: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - hp.warmup_steps) /
+                 jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0)
+    cos = hp.min_lr_ratio + (1 - hp.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return hp.lr * warm * cos
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, step, hp: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(hp, step)
+    b1, b2 = hp.b1, hp.b2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + hp.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

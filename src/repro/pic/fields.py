@@ -1,0 +1,50 @@
+"""1D electrostatic field solver: -phi'' = rho/eps0, E = -phi'.
+
+Tridiagonal Thomas algorithm expressed as two lax.scans (O(n), stable for
+the diagonally-dominant Poisson system), Dirichlet walls phi(0)=phi(L)=0 —
+BIT1's field-solver phase."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thomas_solve(a, b, c, d):
+    """Solve tridiag(a,b,c) x = d. a[0] and c[-1] ignored. All [n]."""
+    def fwd(carry, ys):
+        cp_prev, dp_prev = carry
+        ai, bi, ci, di = ys
+        denom = bi - ai * cp_prev
+        cp = ci / denom
+        dp = (di - ai * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    (_, _), (cps, dps) = jax.lax.scan(fwd, (jnp.array(0.0, d.dtype),
+                                            jnp.array(0.0, d.dtype)),
+                                      (a, b, c, d))
+
+    def bwd(x_next, ys):
+        cp, dp = ys
+        x = dp - cp * x_next
+        return x, x
+
+    _, xs = jax.lax.scan(bwd, jnp.array(0.0, d.dtype), (cps, dps),
+                         reverse=True)
+    return xs
+
+
+def solve_poisson(rho, dx: float, eps0: float = 1.0):
+    """phi on cell centers with phi=0 walls; returns (phi, E) on the grid."""
+    n = rho.shape[0]
+    h2 = dx * dx
+    a = jnp.full((n,), -1.0, rho.dtype)
+    b = jnp.full((n,), 2.0, rho.dtype)
+    c = jnp.full((n,), -1.0, rho.dtype)
+    d = rho * h2 / eps0
+    phi = thomas_solve(a, b, c, d)
+    # E = -dphi/dx, central differences; one-sided at walls
+    E = jnp.zeros_like(phi)
+    E = E.at[1:-1].set(-(phi[2:] - phi[:-2]) / (2 * dx))
+    E = E.at[0].set(-(phi[1] - phi[0]) / dx)
+    E = E.at[-1].set(-(phi[-1] - phi[-2]) / dx)
+    return phi, E

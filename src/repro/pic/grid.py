@@ -1,0 +1,43 @@
+"""1D grid operations: charge deposition (CIC) and binomial smoothing.
+
+Deposition is the classic PIC particle-to-grid scatter; the jnp
+implementation here is the oracle for the Pallas `deposit` kernel
+(kernels/deposit), which restates it as one-hot matmuls for the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deposit_cic(x, weight, alive, n_cells: int, dx: float):
+    """Cloud-in-cell deposition. x: [N] positions, weight: [N], alive: [N]
+    -> density [n_cells] (guard cells folded)."""
+    xi = x / dx
+    i0 = jnp.floor(xi).astype(jnp.int32)
+    frac = xi - i0
+    w = weight * alive
+    i0c = jnp.clip(i0, 0, n_cells - 1)
+    i1c = jnp.clip(i0 + 1, 0, n_cells - 1)
+    rho = jnp.zeros((n_cells,), jnp.float32)
+    rho = rho.at[i0c].add(w * (1.0 - frac))
+    rho = rho.at[i1c].add(w * frac)
+    return rho / dx
+
+
+def smooth_121(rho):
+    """Binomial (1,2,1)/4 digital filter — BIT1's density smoothing phase."""
+    left = jnp.roll(rho, 1).at[0].set(rho[0])
+    right = jnp.roll(rho, -1).at[-1].set(rho[-1])
+    return 0.25 * left + 0.5 * rho + 0.25 * right
+
+
+def gather_field(E, x, dx: float):
+    """Grid-to-particle linear interpolation of the field at positions x."""
+    n = E.shape[0]
+    xi = x / dx
+    i0 = jnp.floor(xi).astype(jnp.int32)
+    frac = xi - i0
+    i0c = jnp.clip(i0, 0, n - 1)
+    i1c = jnp.clip(i0 + 1, 0, n - 1)
+    return E[i0c] * (1.0 - frac) + E[i1c] * frac

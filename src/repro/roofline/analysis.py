@@ -1,0 +1,98 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment's constants).
+
+    compute term    = per-device HLO FLOPs / peak FLOP/s
+    memory term     = per-device HLO bytes / HBM bandwidth
+    collective term = per-device collective traffic / link bandwidth
+
+(The prescribed global formulation `X_total / (chips * rate)` is identical:
+post-SPMD modules are per-partition programs, so per-device = total / chips.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.roofline.hlo_analysis import analyze
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+HBM_PER_CHIP = 16 * 1024**3  # v5e HBM
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_by_kind: dict
+    collective_op_counts: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float                 # 6*N(*active)*D, global
+    useful_flops_ratio: float          # model_flops / (flops_per_device*chips)
+    mfu_bound: float                   # model_flops/(chips*peak)/max(term)
+    arg_bytes_per_device: float = 0.0
+    temp_bytes_per_device: float = 0.0
+    fits_hbm: Optional[bool] = None
+    xla_flops_per_device: float = 0.0  # XLA's own (trip-unaware) number
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def tokens_for_shape(kind: str, seq: int, batch: int) -> int:
+    if kind == "train":
+        return seq * batch
+    if kind == "prefill":
+        return seq * batch
+    return batch                                   # decode: 1 new token/seq
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    n = cfg.n_active_params() if cfg.n_experts else cfg.n_params()
+    d = tokens_for_shape(kind, seq, batch)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * d
+
+
+def build_report(*, arch, shape, mesh_name, n_devices, hlo_text, cfg, kind,
+                 seq, batch, mem_stats=None, xla_cost=None) -> RooflineReport:
+    a = analyze(hlo_text, n_devices)
+    compute_s = a["flops_per_device"] / PEAK_FLOPS
+    memory_s = a["hbm_bytes_per_device"] / HBM_BW
+    collective_s = a["collective_traffic_per_device"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, kind, seq, batch)
+    total_flops = a["flops_per_device"] * n_devices
+    ratio = mf / total_flops if total_flops else 0.0
+    step_time = max(terms.values()) or 1.0
+    mfu_bound = (mf / (n_devices * PEAK_FLOPS)) / step_time
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=a["flops_per_device"],
+        hbm_bytes_per_device=a["hbm_bytes_per_device"],
+        collective_bytes_per_device=a["collective_traffic_per_device"],
+        collective_by_kind=a["collective_traffic_by_kind"],
+        collective_op_counts=a["collective_op_counts"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, useful_flops_ratio=ratio,
+        mfu_bound=mfu_bound)
+    if mem_stats is not None:
+        rep.arg_bytes_per_device = float(mem_stats.argument_size_in_bytes)
+        rep.temp_bytes_per_device = float(mem_stats.temp_size_in_bytes)
+        rep.fits_hbm = (rep.arg_bytes_per_device + rep.temp_bytes_per_device
+                        <= HBM_PER_CHIP)
+    if xla_cost:
+        rep.xla_flops_per_device = float(xla_cost.get("flops", 0.0))
+    return rep

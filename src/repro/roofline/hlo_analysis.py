@@ -1,0 +1,459 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` surfaces) counts a
+while-loop body ONCE — a scan-over-layers model would be undercounted by the
+layer count. This analyzer parses `compiled.as_text()`, resolves each while
+loop's trip count from its condition computation, and recursively accumulates
+
+  * flops        — dots at 2*M*N*K (trip-multiplied), elementwise at |out|
+  * hbm bytes    — operands+outputs of top-level ops (fusion-internal traffic
+                   is free, matching XLA's model)
+  * collectives  — per-op (kind, bytes, group_size, trips) with a ring-model
+                   traffic estimate
+
+All numbers are PER DEVICE (post-SPMD modules are per-partition programs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "logistic", "sine", "cosine",
+    "compare", "select", "clamp", "and", "or", "xor", "not", "atan2",
+    "remainder", "shift-left", "shift-right-arithmetic", "shift-right-logical",
+    "convert", "erf", "is-finite", "expm1", "log1p",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string; tuples summed."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> float:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0.0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return float(n)
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    kind: str
+    out_bytes: float
+    group_size: int
+    trips: float
+
+    @property
+    def traffic_bytes(self) -> float:
+        """Ring-model per-device traffic."""
+        g = max(self.group_size, 1)
+        f = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2 * self.out_bytes * f * self.trips
+        if self.kind == "all-gather":
+            return self.out_bytes * f * self.trips
+        if self.kind == "reduce-scatter":
+            return self.out_bytes * g * f * self.trips      # out = in / g
+        return self.out_bytes * self.trips                  # a2a / permute
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},\s]*?))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                        r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def parse_module(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    entry_name = None
+    cur: Optional[list[Instr]] = None
+    for line in hlo_text.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR_RE.match(line.strip()) if line.rstrip().endswith("{") else None
+        if hdr and ("->" in line):
+            name = hdr.group(1)
+            cur = []
+            comps[name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry_name = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operands: up to the closing paren at depth 0
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[:end]
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.append(Instr(name=name, type_str=type_str.strip(), op=op,
+                         operands=operands, raw=line.strip()))
+    comps["__entry__"] = comps.get(entry_name, [])
+    comps["__entry_name__"] = entry_name  # type: ignore
+    return comps
+
+
+def _group_size(raw: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(raw)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(comps, cond_name: str) -> float:
+    """Max integer constant in the while condition (scan bound)."""
+    best = 1
+    for ins in comps.get(cond_name, []):
+        for m in _CONST_RE.finditer(ins.raw):
+            best = max(best, int(m.group(1)))
+    return float(best)
+
+
+def _called(ins: Instr) -> list[str]:
+    out = []
+    for m in _CALLED_RE.finditer(ins.raw):
+        if m.group(1) is not None:
+            out.extend(x.strip().lstrip("%") for x in m.group(1).split(","))
+        else:
+            out.append(m.group(2))
+    return out
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    [CollectiveRecord(c.kind, c.out_bytes, c.group_size,
+                                      c.trips * k) for c in self.collectives])
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collectives.extend(o.collectives)
+        return self
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str, n_partitions: int):
+        self.comps = parse_module(hlo_text)
+        self.n_partitions = n_partitions
+        self._memo: dict[tuple[str, bool], Cost] = {}
+        self._symtab: dict[str, dict[str, str]] = {}
+
+    def _types(self, comp: str) -> dict[str, str]:
+        if comp not in self._symtab:
+            self._symtab[comp] = {i.name: i.type_str for i in self.comps.get(comp, [])}
+        return self._symtab[comp]
+
+    def _dot_flops(self, ins: Instr, comp: str) -> float:
+        out_elems = shape_elems(ins.type_str)
+        lhs_t = self._types(comp).get(ins.operands[0] if ins.operands else "", "")
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+        contract = 1
+        if m and lhs_t:
+            dims = shape_dims(lhs_t)
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+        return 2.0 * out_elems * contract
+
+    def cost(self, comp: str = "__entry__", in_fusion: bool = False) -> Cost:
+        key = (comp, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total  # guard cycles
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done") or op in ("parameter", "constant", "tuple",
+                                              "get-tuple-element", "bitcast",
+                                              "after-all", "iota", "partition-id",
+                                              "replica-id"):
+                if op in ("iota",):
+                    if not in_fusion:
+                        total.bytes += shape_bytes(ins.type_str)
+                continue
+            if base in COLLECTIVE_OPS:
+                g = _group_size(ins.raw, self.n_partitions)
+                total.collectives.append(CollectiveRecord(
+                    base, self._collective_bytes(ins, comp), g, 1.0))
+                continue
+            if op == "while":
+                body, cond = None, None
+                bm = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                if bm:
+                    trips = _trip_count(self.comps, cm.group(1)) if cm else 1.0
+                    total += self.cost(bm.group(1)).scaled(trips)
+                continue
+            if op == "conditional":
+                branches = _called(ins)
+                if branches:
+                    costs = [self.cost(b) for b in branches]
+                    best = max(costs, key=lambda c: c.flops + c.bytes)
+                    total += best
+                continue
+            if op == "fusion":
+                for c in _called(ins):
+                    inner = self.cost(c, in_fusion=True)
+                    total.flops += inner.flops
+                    total.collectives.extend(inner.collectives)
+                if not in_fusion:
+                    total.bytes += self._fusion_bytes(ins, comp)
+                continue
+            if op == "call" or (op == "custom-call" and "called_computations" in ins.raw):
+                for c in _called(ins):
+                    total += self.cost(c, in_fusion=in_fusion)
+                continue
+            # --- plain instruction ------------------------------------------
+            if op in ("dot", "convolution"):
+                total.flops += self._dot_flops(ins, comp)
+            elif op in ELEMENTWISE:
+                total.flops += shape_elems(ins.type_str)
+            elif op in ("reduce", "reduce-window"):
+                types = self._types(comp)
+                total.flops += sum(shape_elems(types.get(o, ""))
+                                   for o in ins.operands[:1]) or shape_elems(ins.type_str)
+            if not in_fusion:
+                total.bytes += self._instr_bytes(ins, comp)
+        self._memo[key] = total
+        return total
+
+    def _collective_bytes(self, ins: Instr, comp: str) -> float:
+        """TPU-effective bytes for a collective.
+
+        XLA's CPU float support upcasts bf16 dots to f32, so SPMD places
+        partial-dot all-reduces on f32 tensors that are bf16 at the jax
+        level (their only consumers immediately convert back to bf16). A
+        TPU build reduces in bf16 — count that width when every consumer
+        converts the value straight to bf16."""
+        out = shape_bytes(ins.type_str)
+        if "f32[" not in ins.type_str:
+            return out
+        if self._feeds_bf16_convert(ins.name, comp, depth=0):
+            return out / 2.0
+        # Structural rule: rank>=3 f32 all-reduces are activation/cotangent
+        # reductions — bf16 at the jax level (the CPU backend's dot upcast
+        # propagates f32 through the whole residual stream, which a TPU
+        # build never does). Parameter-gradient reductions are
+        # reduce-scatter/all-gather kinds and stay full width. Applied
+        # per-component for tuple (fused) all-reduces.
+        if ins.op.startswith("all-reduce"):
+            total = 0.0
+            for dt, dims in _SHAPE_RE.findall(ins.type_str):
+                if dt not in DTYPE_BYTES:
+                    continue
+                nd = [int(d) for d in dims.split(",") if d]
+                b = float(np.prod(nd)) * DTYPE_BYTES[dt] if nd else DTYPE_BYTES[dt]
+                if dt == "f32" and len(nd) >= 3:
+                    b /= 2.0
+                total += b
+            return total
+        return out
+
+    def _feeds_bf16_convert(self, name: str, comp: str, depth: int) -> bool:
+        if depth > 2:
+            return False
+        for c in self.comps.get(comp, []):
+            if name not in c.operands:
+                continue
+            if c.op == "convert" and c.type_str.startswith("bf16"):
+                return True
+            if c.op == "get-tuple-element":      # fused tuple all-reduce
+                if self._feeds_bf16_convert(c.name, comp, depth + 1):
+                    return True
+            if c.op == "fusion" and _called(c):
+                idx = c.operands.index(name)
+                body = self.comps.get(_called(c)[0], [])
+                pname = None
+                for i2 in body:
+                    m = re.search(r"parameter\((\d+)\)", i2.raw)
+                    if i2.op == "parameter" and m and int(m.group(1)) == idx:
+                        pname = i2.name
+                        break
+                if pname and any(i2.op == "convert" and pname in i2.operands
+                                 and i2.type_str.startswith("bf16")
+                                 for i2 in body):
+                    return True
+        return False
+
+    def _fusion_bytes(self, ins: Instr, comp: str) -> float:
+        """Fusion traffic = output + operands, except operands that are only
+        dynamic-sliced inside (scan reading one layer of a stacked tensor)
+        pay slice-sized traffic, not the full stack."""
+        types = self._types(comp)
+        called = _called(ins)
+        body = self.comps.get(called[0], []) if called else []
+        total = shape_bytes(ins.type_str)
+        # in-place DUS fusions write only the update, not the whole buffer
+        for i2 in body:
+            if "ROOT" in i2.raw and i2.op == "dynamic-update-slice":
+                if len(i2.operands) > 1:
+                    body_types = {b.name: b.type_str for b in body}
+                    total = shape_bytes(body_types.get(i2.operands[1], ""))
+                break
+        param_idx: dict[str, int] = {}
+        for i2 in body:
+            if i2.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i2.raw)
+                if m:
+                    param_idx[i2.name] = int(m.group(1))
+        users: dict[str, list[Instr]] = {}
+        for i2 in body:
+            for o in i2.operands:
+                users.setdefault(o, []).append(i2)
+
+        def effective_users(name, depth=0):
+            out = []
+            for u in users.get(name, []):
+                if u.op in ("bitcast", "reshape") and depth < 4:
+                    out.extend(effective_users(u.name, depth + 1))
+                else:
+                    out.append((name, u))
+            return out
+
+        for pname, idx in param_idx.items():
+            operand_name = ins.operands[idx] if idx < len(ins.operands) else None
+            full = shape_bytes(types.get(operand_name, "")) if operand_name else 0.0
+            us = effective_users(pname)
+            windowed = us and all(
+                (u.op == "dynamic-slice" and u.operands and u.operands[0] == src)
+                or (u.op == "dynamic-update-slice" and u.operands
+                    and u.operands[0] == src)
+                for src, u in us)
+            if windowed:
+                sub = 0.0
+                for src, u in us:
+                    if u.op == "dynamic-slice":
+                        sub += shape_bytes(u.type_str)
+                    else:  # DUS: traffic = the update written in place
+                        upd = (shape_bytes(self._types(called[0]).get(u.operands[1], ""))
+                               if len(u.operands) > 1 else 0.0)
+                        sub += upd
+                total += sub
+            else:
+                total += full
+        return total
+
+    def _instr_bytes(self, ins: Instr, comp: str) -> float:
+        """HBM-traffic estimate per op, approximating TPU fusion behaviour:
+        elementwise chains are assumed fused (output write only); data-moving
+        and compute ops pay operands+output; windowed slices pay slice-sized
+        traffic, never the full sliced-into buffer."""
+        op = ins.op
+        out = shape_bytes(ins.type_str)
+        types = self._types(comp)
+        if op in ("dynamic-slice", "gather"):
+            return 2 * out
+        if op == "dynamic-update-slice":
+            upd = shape_bytes(types.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0.0
+            return 2 * upd
+        if op == "scatter":
+            upd = shape_bytes(types.get(ins.operands[-1], "")) if ins.operands else 0.0
+            return 2 * upd + out
+        if op in ("dot", "convolution", "reduce", "reduce-window", "concatenate",
+                  "copy", "sort", "pad", "cholesky", "triangular-solve", "select-and-scatter"):
+            return out + sum(shape_bytes(types.get(o, "")) for o in ins.operands)
+        if op in ("reshape", "bitcast", "transpose", "broadcast"):
+            return out if op == "transpose" else 0.0
+        # elementwise & everything else: assume fused into neighbours; the
+        # produced buffer is written once
+        return out
+
+
+def analyze(hlo_text: str, n_partitions: int) -> dict:
+    """Per-device flops / hbm bytes / collective traffic from HLO text."""
+    an = HloAnalyzer(hlo_text, n_partitions)
+    c = an.cost()
+    by_kind: dict[str, float] = {}
+    n_ops: dict[str, float] = {}
+    for rec in c.collectives:
+        by_kind[rec.kind] = by_kind.get(rec.kind, 0.0) + rec.traffic_bytes
+        n_ops[rec.kind] = n_ops.get(rec.kind, 0.0) + rec.trips
+    return {
+        "flops_per_device": c.flops,
+        "hbm_bytes_per_device": c.bytes,
+        "collective_traffic_per_device": sum(by_kind.values()),
+        "collective_traffic_by_kind": by_kind,
+        "collective_op_counts": n_ops,
+    }

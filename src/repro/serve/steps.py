@@ -1,0 +1,28 @@
+"""Serving steps: prefill (full-sequence, builds the cache) and decode
+(one token against the cache). These are the functions the decode/long
+dry-run shapes lower, and what serve/engine.py drives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg, *, q_chunk: int = 1024, kv_chunk: int = 1024,
+                      ssd_chunk: int = 128):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(params, cfg, batch, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+        # return only the final position's logits — next-token distribution
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, token, cache_len, embeds=None):
+        logits, cache = M.decode_step(params, cfg, token, cache, cache_len,
+                                      embeds=embeds)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return decode_step

@@ -1,0 +1,82 @@
+"""The jitted train step: remat'd forward/backward + sharded AdamW.
+
+Gradient reduction over `data`/`pod` is inserted by the SPMD partitioner from
+the sharding constraints; optional int8 error-feedback compression models the
+cross-pod (DCN) all-reduce (see optim/grad_compress.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.grad_compress import compress_with_feedback
+
+
+def make_train_step(cfg, hp: AdamWConfig, *, grad_compression: bool = False,
+                    remat: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, ssd_chunk: int = 128,
+                    microbatches: int = 1):
+    """microbatches > 1 = gradient accumulation: the global batch is split
+    into k sequential microbatches (lax.scan), shrinking live activations by
+    k at the cost of k smaller collective rounds. This is what makes the
+    90B/480B train_4k cells fit 16 GB HBM (EXPERIMENTS.md §Perf it.5)."""
+    from repro.meshctx import shard_hint
+
+    def grads_and_metrics(params, batch):
+        def lf(p):
+            return M.loss_fn(p, cfg, batch, remat=remat, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            grads, metrics = grads_and_metrics(state["params"], batch)
+        else:
+            k = microbatches
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            mb_batch = {kk: split(v) for kk, v in batch.items()
+                        if v is not None}
+
+            def body(acc, mb):
+                mb = {kk: shard_hint(v, ("pod", "data"),
+                                     *([None] * (v.ndim - 1)))
+                      for kk, v in mb.items()}
+                g, m = grads_and_metrics(state["params"], mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            grads, ms = jax.lax.scan(body, zeros, mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), ms)
+
+        new_state = dict(state)
+        if grad_compression:
+            grads, new_state["residuals"] = compress_with_feedback(
+                grads, state["residuals"])
+        new_params, new_opt, om = adamw_update(state["params"], grads,
+                                               state["opt"], state["step"], hp)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        return new_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(cfg, *, q_chunk: int = 1024, kv_chunk: int = 1024,
+                   ssd_chunk: int = 128):
+    def eval_step(params, batch):
+        _, metrics = M.loss_fn(params, cfg, batch, remat=False, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+        return metrics
+    return eval_step

@@ -1,0 +1,105 @@
+"""Fault-tolerant training loop.
+
+Wires together: jitted train step, synthetic data pipeline, async openPMD/JBP
+checkpointing (CheckpointManager), automatic restart from the newest valid
+checkpoint, and a crash-injection hook used by the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import SyntheticTokens
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    seed: int = 0
+    seq_len: int = 256
+    global_batch: int = 8
+    grad_compression: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, hp: AdamWConfig,
+                 ckpt_dir, *, engine_config=None):
+        from repro.core.bp_engine import EngineConfig
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.hp = hp
+        self.manager = CheckpointManager(
+            ckpt_dir, every=tcfg.ckpt_every, keep_n=tcfg.ckpt_keep,
+            engine_config=engine_config or EngineConfig(aggregators=2,
+                                                        codec="blosc"))
+        self.data = SyntheticTokens(cfg.padded_vocab if cfg.family != "audio"
+                                    else cfg.vocab_size,
+                                    tcfg.seq_len, tcfg.global_batch,
+                                    seed=tcfg.seed)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, hp, grad_compression=tcfg.grad_compression,
+            q_chunk=min(256, tcfg.seq_len), kv_chunk=min(256, tcfg.seq_len),
+            ssd_chunk=min(64, tcfg.seq_len)),
+            donate_argnums=(0,))
+        self.history: list[dict] = []
+
+    def _fresh_state(self):
+        return init_train_state(self.cfg, jax.random.PRNGKey(self.tcfg.seed),
+                                grad_compression=self.tcfg.grad_compression)
+
+    def _make_batch(self, step: int):
+        b = self.data.batch_at(step)
+        if self.cfg.family == "audio":
+            emb = np.random.default_rng(step).normal(
+                size=(b["tokens"].shape[0], b["tokens"].shape[1],
+                      self.cfg.d_model)).astype(np.float32)
+            return {"embeds": emb, "labels": b["labels"]}
+        if self.cfg.family == "vlm":
+            vis = np.random.default_rng(step).normal(
+                size=(b["tokens"].shape[0], self.cfg.n_vision_tokens,
+                      self.cfg.d_model)).astype(np.float32)
+            return {**b, "vision_embeds": vis}
+        return b
+
+    def run(self, *, crash_at: Optional[int] = None,
+            on_step: Optional[Callable] = None) -> dict:
+        """Train to tcfg.steps, resuming from the newest valid checkpoint.
+        `crash_at` raises after that step (fault-injection for tests)."""
+        state = self._fresh_state()
+        restored = self.manager.restore_latest(state)
+        if restored is not None:
+            state, at = restored
+            print(f"[trainer] resumed from checkpoint step {at}")
+        start = int(jax.device_get(state["step"]))
+        t0 = time.time()
+        for step in range(start, self.tcfg.steps):
+            batch = self._make_batch(step)
+            state, metrics = self.step_fn(state, batch)
+            if (step + 1) % self.tcfg.log_every == 0 or step == start:
+                m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+                m["step"] = step + 1
+                m["wall_s"] = time.time() - t0
+                self.history.append(m)
+                print(f"[trainer] step {step+1} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}")
+            self.manager.save(state, step + 1)
+            if on_step:
+                on_step(step + 1, state)
+            if crash_at is not None and step + 1 >= crash_at:
+                self.manager.wait()
+                raise RuntimeError(f"injected crash at step {step+1}")
+        self.manager.save(state, self.tcfg.steps, force=True)
+        self.manager.wait()
+        return {"state": state, "history": self.history}

@@ -1,0 +1,20 @@
+import pathlib
+import shutil
+import tempfile
+
+import pytest
+
+from repro.core.darshan import MONITOR
+
+
+@pytest.fixture()
+def tmpdir_path():
+    p = pathlib.Path(tempfile.mkdtemp(prefix="repro-test-"))
+    yield p
+    shutil.rmtree(p, ignore_errors=True)
+
+
+@pytest.fixture(autouse=True)
+def fresh_monitor():
+    MONITOR.reset()
+    yield

@@ -1,0 +1,94 @@
+"""Attention: flash-vjp vs O(S^2) reference, GQA expansion, decode parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (attention_block, decode_attention,
+                                    flash_attention_jnp, init_attention,
+                                    reference_attention)
+
+
+def _cfg(H=4, kv=2, hd=16, qk_norm=False, bias=False):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=H, n_kv_heads=kv, d_ff=64, vocab_size=64,
+                       head_dim=hd, qk_norm=qk_norm, qkv_bias=bias)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunks", [(32, 32), (64, 16), (128, 128)])
+def test_flash_matches_reference(causal, chunks):
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 128, 4, 32
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    got = flash_attention_jnp(q, k, v, causal=causal, q_chunk=chunks[0],
+                              kv_chunk=chunks[1])
+    ref = reference_attention(q, k, v, causal=causal)
+    # the production flash keeps probabilities in bf16 for the MXU AV matmul
+    assert jnp.max(jnp.abs(got - ref)) < 2e-2
+
+
+def test_flash_grads_match_reference():
+    key = jax.random.PRNGKey(1)
+    B, S, H, D = 2, 64, 2, 16
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+
+    def lf(f):
+        return lambda *a: jnp.sum(f(*a).astype(jnp.float32) ** 2)
+
+    g1 = jax.grad(lf(lambda q, k, v: flash_attention_jnp(
+        q, k, v, q_chunk=16, kv_chunk=16)), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lf(lambda q, k, v: reference_attention(q, k, v)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        denom = jnp.maximum(jnp.max(jnp.abs(b)), 1e-6)
+        assert jnp.max(jnp.abs(a - b)) / denom < 2e-2
+
+
+@pytest.mark.parametrize("H,kv", [(4, 4), (4, 2), (6, 2), (15, 5)])
+def test_gqa_block_matches_reference(H, kv):
+    """attention_block (expanded-KV flash) == grouped O(S^2) reference."""
+    cfg = _cfg(H=H, kv=kv)
+    key = jax.random.PRNGKey(2)
+    p = init_attention(key, cfg)
+    B, S = 2, 64
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    y, (k, v) = attention_block(p, x.astype(jnp.bfloat16), cfg=cfg,
+                                positions=pos, q_chunk=32, kv_chunk=32)
+    # reference path: grouped attention on the SAME projections
+    from repro.models.attention import _head_proj, _out_proj, _project_qkv
+    q2, k2, v2 = _project_qkv(p, x.astype(jnp.bfloat16),
+                              x.astype(jnp.bfloat16), cfg, pos, pos, rope=True)
+    o_ref = reference_attention(q2, k2, v2, causal=True)
+    y_ref = _out_proj(p["wo"], o_ref)
+    denom = jnp.maximum(jnp.max(jnp.abs(y_ref.astype(jnp.float32))), 1e-6)
+    assert jnp.max(jnp.abs((y - y_ref).astype(jnp.float32))) / denom < 3e-2
+    assert k.shape == (B, S, kv, cfg.resolved_head_dim)
+
+
+def test_decode_matches_full_forward():
+    """Token-by-token decode logits == full-sequence attention outputs."""
+    cfg = _cfg(H=4, kv=2)
+    key = jax.random.PRNGKey(3)
+    p = init_attention(key, cfg)
+    B, S = 2, 16
+    x = jax.random.normal(key, (B, S, cfg.d_model)).astype(jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    y_full, (k, v) = attention_block(p, x, cfg=cfg, positions=pos,
+                                     q_chunk=16, kv_chunk=16)
+    hd = cfg.resolved_head_dim
+    ck = jnp.zeros((B, S, cfg.n_kv_heads, hd), jnp.bfloat16)
+    cv = jnp.zeros_like(ck)
+    outs = []
+    for t in range(S):
+        yt, ck, cv = decode_attention(p, x[:, t:t + 1], ck, cv,
+                                      jnp.asarray(t, jnp.int32), cfg=cfg)
+        outs.append(yt)
+    y_dec = jnp.concatenate(outs, axis=1)
+    err = jnp.max(jnp.abs((y_full - y_dec).astype(jnp.float32)))
+    assert err < 3e-2, err

@@ -1,0 +1,101 @@
+"""JBP engine: roundtrips, aggregation invariants, crash consistency."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregator_of
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig, IDX_SIZE
+from repro.core.striping import StripeConfig
+
+
+def _write_series(path, n_ranks=8, aggregators=3, codec="none", steps=2,
+                  stripe=None):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3,
+                       stripe=stripe, n_osts=4)
+    w = BpWriter(path, n_ranks, cfg)
+    rng = np.random.default_rng(0)
+    truth = {}
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(n_ranks * 16, 4)).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16],
+                  global_shape=g.shape, offset=(r * 16, 0), rank=r)
+        w.end_step()
+    w.close()
+    return truth
+
+
+@pytest.mark.parametrize("codec", ["none", "blosc", "bzip2"])
+@pytest.mark.parametrize("aggregators", [1, 3, 8])
+def test_roundtrip(tmpdir_path, codec, aggregators):
+    truth = _write_series(tmpdir_path / "s.bp4", codec=codec,
+                          aggregators=aggregators)
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0, 1]
+    for s, g in truth.items():
+        np.testing.assert_array_equal(r.read_var(s, "var/x"), g)
+
+
+def test_striped_roundtrip(tmpdir_path):
+    truth = _write_series(tmpdir_path / "s.bp4", aggregators=2,
+                          stripe=StripeConfig(stripe_count=2, stripe_size=256))
+    r = BpReader(tmpdir_path / "s.bp4")
+    np.testing.assert_array_equal(r.read_var(1, "var/x"), truth[1])
+
+
+def test_subfile_count_equals_aggregators(tmpdir_path):
+    """N ranks -> M files: the paper's Table II invariant."""
+    _write_series(tmpdir_path / "s.bp4", n_ranks=16, aggregators=5)
+    datafiles = list((tmpdir_path / "s.bp4").glob("data.*"))
+    assert len(datafiles) == 5
+
+
+def test_box_selection(tmpdir_path):
+    truth = _write_series(tmpdir_path / "s.bp4")
+    r = BpReader(tmpdir_path / "s.bp4")
+    sel = r.read_var(0, "var/x", offset=(21, 1), extent=(40, 2))
+    np.testing.assert_array_equal(sel, truth[0][21:61, 1:3])
+
+
+def test_torn_step_is_dropped(tmpdir_path):
+    """Crash consistency: corrupt md.0 bytes -> that step invalid, rest ok."""
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    md = (tmpdir_path / "s.bp4" / "md.0")
+    raw = bytearray(md.read_bytes())
+    # find step-1 record region via the index and flip a byte
+    idx = (tmpdir_path / "s.bp4" / "md.idx").read_bytes()
+    import struct
+    _, off, ln, _, _, _, _, _ = struct.unpack_from("<QQQIIQQQ", idx, IDX_SIZE)
+    raw[off + 5] ^= 0xFF
+    md.write_bytes(bytes(raw))
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0, 2]
+
+
+def test_truncated_index_ignores_tail(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", steps=2)
+    idxp = tmpdir_path / "s.bp4" / "md.idx"
+    idxp.write_bytes(idxp.read_bytes()[:IDX_SIZE + 7])   # torn final record
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0]
+
+
+def test_profiling_json(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", codec="blosc")
+    prof = json.loads((tmpdir_path / "s.bp4" / "profiling.json").read_text())
+    assert prof["engine"] == "JBP(BP4)"
+    assert len(prof["steps"]) == 2
+    assert prof["steps"][0]["bytes_raw"] > 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_ranks=st.integers(1, 4096), m=st.integers(1, 512))
+def test_property_aggregator_assignment(n_ranks, m):
+    """Contiguous, monotone, surjective onto min(m, n_ranks) aggregators."""
+    assign = [aggregator_of(r, n_ranks, m) for r in range(n_ranks)]
+    assert assign == sorted(assign)
+    assert set(assign) == set(range(min(m, n_ranks)))

@@ -1,0 +1,73 @@
+"""Dry-run integration: one real (arch x shape x mesh) cell compiles on the
+production mesh in a subprocess (512 fake devices), plus skip-rule checks."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.shapes import SHAPE_TABLE, applicable
+
+
+def test_shape_table_is_the_assignment():
+    assert SHAPE_TABLE["train_4k"].seq == 4096
+    assert SHAPE_TABLE["train_4k"].batch == 256
+    assert SHAPE_TABLE["prefill_32k"].seq == 32768
+    assert SHAPE_TABLE["prefill_32k"].batch == 32
+    assert SHAPE_TABLE["decode_32k"].batch == 128
+    assert SHAPE_TABLE["long_500k"].seq == 524288
+    assert SHAPE_TABLE["long_500k"].batch == 1
+
+
+def test_long_context_skip_rules():
+    ok, _ = applicable(get_config("mamba2-2.7b"), "long_500k")
+    assert ok
+    ok, _ = applicable(get_config("zamba2-2.7b"), "long_500k")
+    assert ok
+    for arch in ("phi3-mini-3.8b", "qwen3-4b", "arctic-480b",
+                 "llama-3.2-vision-90b", "musicgen-large"):
+        ok, why = applicable(get_config(arch), "long_500k")
+        assert not ok and "full-attention" in why
+
+
+@pytest.mark.slow
+def test_one_cell_compiles_on_production_mesh():
+    code = textwrap.dedent("""
+        from repro.launch.dryrun import run_cell
+        out = run_cell("qwen1.5-0.5b", "decode_32k", "single", verbose=False)
+        assert out["status"] == "ok", out
+        r = out["roofline"]
+        assert r["flops_per_device"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert out["memory_analysis"]["argument_bytes"] > 0
+        print("CELL_OK", r["dominant"])
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=_env())
+    assert "CELL_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+@pytest.mark.slow
+def test_multipod_mesh_cell():
+    code = textwrap.dedent("""
+        import os
+        os.environ["REPRO_DRYRUN_XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512")
+        from repro.launch.dryrun import run_cell
+        out = run_cell("qwen1.5-0.5b", "decode_32k", "multi", verbose=False)
+        assert out["status"] == "ok", out
+        assert out["mesh_info"]["n_devices"] == 512
+        print("MULTIPOD_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=_env())
+    assert "MULTIPOD_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+def _env():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return env

@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitshuffle import ops as bops
+from repro.kernels.bitshuffle.ref import byte_shuffle_ref
+from repro.kernels.deposit import ops as dops
+from repro.kernels.deposit.ref import deposit_ref
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention.ref import flash_ref_headmajor, reference_attention
+from repro.kernels.ssd_scan import ops as sops
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_recurrent_reference
+
+
+# ------------------------------------------------------------ flash_attention
+@pytest.mark.parametrize("S", [128, 256, 320])
+@pytest.mark.parametrize("D", [32, 64, 128])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_shapes(S, D, causal):
+    key = jax.random.PRNGKey(S + D)
+    B, H = 2, 2
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D),
+                                 jnp.float32) for i in range(3))
+    got = fops.flash_attention(q, k, v, causal=causal, qc=128, kc=128)
+    ref = reference_attention(q, k, v, causal=causal)
+    assert jnp.max(jnp.abs(got - ref)) < 2e-5, (S, D, causal)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 256, 2, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D),
+                                 jnp.float32).astype(dtype) for i in range(3))
+    got = fops.flash_attention(q, k, v, qc=128, kc=128)
+    ref = reference_attention(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert jnp.max(jnp.abs(got.astype(jnp.float32) -
+                           ref.astype(jnp.float32))) < tol
+
+
+# ------------------------------------------------------------------ ssd_scan
+@pytest.mark.parametrize("s,chunk", [(128, 64), (256, 128), (192, 64)])
+@pytest.mark.parametrize("p,n", [(32, 16), (64, 32)])
+def test_ssd_kernel_shapes(s, chunk, p, n):
+    key = jax.random.PRNGKey(s + p)
+    b, h = 2, 3
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    D = jnp.ones((h,))
+    got = sops.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    ref, _ = ssd_recurrent_reference(x, dt, A, B, C, D)
+    assert jnp.max(jnp.abs(got - ref.astype(jnp.float32))) < 5e-2
+
+
+# ---------------------------------------------------------------- bitshuffle
+@pytest.mark.parametrize("itemsize", [2, 4, 8])
+@pytest.mark.parametrize("n_bytes", [4096, 40_000, 123_456])
+def test_bitshuffle_kernel(itemsize, n_bytes):
+    rng = np.random.default_rng(n_bytes)
+    n_bytes -= n_bytes % itemsize
+    data = jnp.asarray(rng.integers(0, 256, n_bytes, dtype=np.uint8))
+    shuf, n = bops.shuffle(data, itemsize=itemsize)
+    pad = (-n_bytes) % (itemsize * 1024)
+    ref = byte_shuffle_ref(jnp.pad(data, (0, pad)), itemsize=itemsize)
+    assert (shuf == ref).all()
+    back = bops.unshuffle(shuf, n, itemsize=itemsize)
+    assert (back == data).all()
+
+
+# ------------------------------------------------------------------- deposit
+@pytest.mark.parametrize("n,n_cells", [(2000, 128), (5000, 300), (1024, 1024)])
+def test_deposit_kernel(n, n_cells):
+    rng = np.random.default_rng(n)
+    dx = 1.0 / n_cells
+    x = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    alive = jnp.asarray((rng.uniform(0, 1, n) > 0.25).astype(np.float32))
+    got = dops.deposit(x, w, alive, n_cells=n_cells, dx=dx)
+    ref = deposit_ref(x, w, alive, n_cells, dx)
+    rel = jnp.max(jnp.abs(got - ref)) / jnp.maximum(jnp.max(jnp.abs(ref)), 1e-9)
+    assert rel < 1e-4
+
+
+def test_deposit_conserves_charge():
+    rng = np.random.default_rng(9)
+    n, n_cells = 4096, 256
+    dx = 1.0 / n_cells
+    x = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    w = jnp.ones((n,), jnp.float32)
+    alive = jnp.ones((n,), jnp.float32)
+    rho = dops.deposit(x, w, alive, n_cells=n_cells, dx=dx)
+    assert abs(float(jnp.sum(rho) * dx) - n) / n < 1e-5

@@ -1,0 +1,82 @@
+"""Per-arch smoke tests: reduced config, one forward + train-grad + decode
+step on CPU; output shapes + no NaNs. (The FULL configs are exercised only
+via the dry-run — ShapeDtypeStructs, no allocation.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs, reduce_for_smoke
+from repro.models import model as M
+
+ARCHS = list_configs()
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        batch["tokens"] = None
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = M.forward(params, cfg, batch, q_chunk=16, kv_chunk=16,
+                            ssd_chunk=16)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert not jnp.isnan(logits).any()
+    loss, metrics = M.loss_fn(params, cfg, batch, q_chunk=16, kv_chunk=16,
+                              ssd_chunk=16)
+    assert jnp.isfinite(loss)
+    g = jax.grad(lambda p: M.loss_fn(p, cfg, batch, q_chunk=16, kv_chunk=16,
+                                     ssd_chunk=16)[0])(params)
+    gn = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(g))
+    assert jnp.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S = 2, 32
+    cache = M.init_decode_cache(cfg, B, S)
+    if cfg.family == "vlm":
+        batch = _batch(cfg, key, B, S)
+        _, cache = M.prefill(params, cfg, batch, q_chunk=16, kv_chunk=16)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    emb = (jax.random.normal(key, (B, 1, cfg.d_model))
+           if cfg.family == "audio" else None)
+    logits, cache2 = M.decode_step(params, cfg, tok, cache,
+                                   jnp.asarray(3, jnp.int32), embeds=emb)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert not jnp.isnan(logits).any()
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache2) ==
+            jax.tree_util.tree_structure(cache))
+
+
+def test_full_config_param_counts_match_names():
+    expected = {"arctic-480b": 477e9, "llama-3.2-vision-90b": 88e9,
+                "deepseek-moe-16b": 16.4e9, "qwen3-4b": 4.4e9,
+                "phi3-mini-3.8b": 3.8e9, "mamba2-2.7b": 2.8e9,
+                "zamba2-2.7b": 2.4e9, "musicgen-large": 3.2e9,
+                "qwen1.5-0.5b": 0.46e9, "smollm-360m": 0.36e9}
+    for arch, n in expected.items():
+        got = get_config(arch).n_params()
+        assert abs(got - n) / n < 0.05, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("arctic-480b")
+    assert cfg.n_active_params() < 0.05 * cfg.n_params()

@@ -1,0 +1,69 @@
+"""openPMD data-model semantics over the JBP engine."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Series
+
+
+def test_standard_attributes(tmpdir_path):
+    s = Series(tmpdir_path / "a.bp4", "w")
+    assert s.attributes["openPMD"] == "1.1.0"
+    assert s.attributes["basePath"] == "/data/%T/"
+    assert s.attributes["iterationEncoding"] == "groupBased"
+    s.close()
+
+
+def test_mesh_and_particles_roundtrip(tmpdir_path):
+    s = Series(tmpdir_path / "a.bp4", "w", n_ranks=4,
+               engine_config=EngineConfig(aggregators=2, codec="blosc"))
+    rng = np.random.default_rng(0)
+    dens = rng.normal(size=(64,)).astype(np.float32)
+    it = s.iterations[10]
+    it.time = 1.5
+    rc = it.meshes["density"][""]
+    rc.reset_dataset(np.float32, (64,))
+    for r in range(4):
+        rc.store_chunk(dens[r * 16:(r + 1) * 16], offset=(r * 16,), rank=r)
+    pos = rng.normal(size=(100,))
+    px = it.particles["electrons"]["position"]["x"]
+    px.reset_dataset(np.float64, (100,))
+    px.store_chunk(pos, offset=(0,), rank=0)
+    it.close()
+    s.close()
+
+    r = Series(tmpdir_path / "a.bp4", "r")
+    assert r.read_iterations() == [10]
+    reader = r._reader()
+    np.testing.assert_array_equal(
+        reader.read_var(10, "/data/10/meshes/density"), dens)
+    np.testing.assert_array_equal(
+        reader.read_var(10, "/data/10/particles/electrons/position/x"), pos)
+    assert reader.attributes(10)["/data/10/time"] == 1.5
+
+
+def test_multiple_iterations_one_series(tmpdir_path):
+    """Group-based iteration encoding with steps: one dir, many steps."""
+    s = Series(tmpdir_path / "a.bp4", "w")
+    for i in (0, 5, 9):
+        rc = s.iterations[i].meshes["n"][""]
+        rc.reset_dataset(np.float32, (8,))
+        rc.store_chunk(np.full(8, float(i), np.float32), offset=(0,))
+        s.flush()
+    s.close()
+    r = Series(tmpdir_path / "a.bp4", "r")
+    assert r.read_iterations() == [0, 5, 9]
+    got = r._reader().read_var(9, "/data/9/meshes/n")
+    np.testing.assert_array_equal(got, np.full(8, 9.0, np.float32))
+
+
+def test_flush_is_single_action(tmpdir_path):
+    """Nothing hits the engine before flush(); everything after."""
+    s = Series(tmpdir_path / "a.bp4", "w")
+    rc = s.iterations[0].meshes["x"][""]
+    rc.reset_dataset(np.float32, (4,))
+    rc.store_chunk(np.ones(4, np.float32), offset=(0,))
+    assert not (tmpdir_path / "a.bp4" / "md.idx").exists() or \
+        (tmpdir_path / "a.bp4" / "md.idx").stat().st_size == 0
+    s.flush()
+    assert (tmpdir_path / "a.bp4" / "md.idx").stat().st_size > 0
+    s.close()

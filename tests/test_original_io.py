@@ -1,0 +1,30 @@
+"""BIT1 Original-I/O baseline: roundtrips and the O(ranks) file pathology."""
+import numpy as np
+
+from repro.core.original_io import read_dmp, write_dat, write_dmp
+
+
+def test_dmp_roundtrip(tmpdir_path):
+    rng = np.random.default_rng(0)
+    arrays = {"x": rng.normal(size=(100,)).astype(np.float32),
+              "v": rng.normal(size=(100, 3)).astype(np.float64),
+              "ids": np.arange(7, dtype=np.int32)}
+    p = write_dmp(tmpdir_path, 2, 50, arrays)
+    back = read_dmp(p)
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(back[k], v)
+
+
+def test_file_count_scales_with_ranks(tmpdir_path):
+    """Paper Table II: total files O(ranks); avg size O(1/ranks)."""
+    arr = np.arange(4096, dtype=np.float32)
+    for n_ranks in (4, 8):
+        d = tmpdir_path / f"r{n_ranks}"
+        for r in range(n_ranks):
+            write_dat(d, r, 0, {"ne": arr[:4096 // n_ranks]})
+            write_dmp(d, r, 0, {"x": arr[:4096 // n_ranks]})
+        files = list(d.iterdir())
+        assert len(files) == 2 * n_ranks
+    s4 = sum(f.stat().st_size for f in (tmpdir_path / "r4").iterdir()) / 8
+    s8 = sum(f.stat().st_size for f in (tmpdir_path / "r8").iterdir()) / 16
+    assert s8 < s4          # avg file size shrinks with rank count

@@ -1,0 +1,105 @@
+"""PIC-MC physics invariants (paper §II use case §III-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.pic.fields import solve_poisson, thomas_solve
+from repro.pic.grid import deposit_cic, gather_field, smooth_121
+from repro.pic.simulation import (PicConfig, diagnostics, init_sim,
+                                  pic_run_chunk, pic_step)
+
+
+def test_thomas_vs_dense():
+    rng = np.random.default_rng(0)
+    n = 64
+    a = rng.normal(size=n).astype(np.float32) * 0.1
+    b = (2.0 + rng.uniform(0, 1, n)).astype(np.float32)
+    c = rng.normal(size=n).astype(np.float32) * 0.1
+    d = rng.normal(size=n).astype(np.float32)
+    M = np.diag(b) + np.diag(a[1:], -1) + np.diag(c[:-1], 1)
+    x_ref = np.linalg.solve(M, d)
+    x = thomas_solve(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c),
+                     jnp.asarray(d))
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_poisson_sine_analytic():
+    """-phi'' = sin(k x) -> phi = sin(k x)/k^2, with 2nd-order convergence."""
+    errs = {}
+    for n in (128, 512):
+        L = 1.0
+        dx = L / n
+        xs = (np.arange(n) + 1.0) * dx      # interior solve convention
+        kw = 2 * np.pi / L
+        rho = np.sin(kw * xs).astype(np.float32)
+        phi, E = solve_poisson(jnp.asarray(rho), dx)
+        phi_ref = np.sin(kw * xs) / kw**2
+        errs[n] = (np.max(np.abs(np.asarray(phi) - phi_ref)) /
+                   np.max(np.abs(phi_ref)))
+    assert errs[512] < 5e-2
+    assert errs[512] < errs[128]            # converges with resolution
+
+
+def test_deposit_gather_adjointness():
+    """sum_p gather(F, x_p) w_p == sum_c F_c deposit(x, w)_c * dx."""
+    rng = np.random.default_rng(1)
+    n, n_cells, dx = 1000, 64, 1.0 / 64
+    x = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32))
+    alive = jnp.ones((n,), jnp.float32)
+    F = jnp.asarray(rng.normal(size=n_cells).astype(np.float32))
+    lhs = float(jnp.sum(gather_field(F, x, dx) * w))
+    rho = deposit_cic(x, w, alive, n_cells, dx)
+    rhs = float(jnp.sum(F * rho) * dx)
+    assert abs(lhs - rhs) / abs(lhs) < 1e-3
+
+
+def test_smoothing_preserves_total():
+    rho = jnp.asarray(np.random.default_rng(2).uniform(0, 1, 128)
+                      .astype(np.float32))
+    sm = smooth_121(rho)
+    # interior-conserving up to boundary treatment
+    assert abs(float(jnp.sum(sm) - jnp.sum(rho))) / float(jnp.sum(rho)) < 0.02
+
+
+def test_ionization_decay_matches_ode():
+    cfg = PicConfig(n_cells=256, capacity=1 << 14, n_electrons=4096,
+                    n_ions=4096, n_neutrals=4096, rate_R=0.02, dt=1e-2)
+    state = init_sim(cfg, jax.random.PRNGKey(0))
+    d0 = diagnostics(state, cfg)
+    state = pic_run_chunk(state, cfg, 200)
+    d1 = diagnostics(state, cfg)
+    ne, nn = d0["count/e"], d0["count/D"]
+    for _ in range(200):
+        dn = nn * (ne * cfg.dx) * cfg.rate_R * cfg.dt
+        nn -= dn
+        ne += dn
+    assert abs(nn - d1["count/D"]) / nn < 0.08
+    # conservation
+    assert abs((d1["count/D"] + d1["count/D_plus"]) -
+               (d0["count/D"] + d0["count/D_plus"])) < 1e-3
+    assert abs((d1["count/e"] - d1["count/D_plus"]) -
+               (d0["count/e"] - d0["count/D_plus"])) < 1e-3
+
+
+def test_absorbing_walls_lose_particles():
+    cfg = PicConfig(n_cells=128, capacity=1 << 12, n_electrons=2048,
+                    n_ions=2048, n_neutrals=8, boundary="absorbing",
+                    field_solve=True, smoothing=True, dt=1e-3, rate_R=0.0)
+    state = pic_run_chunk(init_sim(cfg, jax.random.PRNGKey(1)), cfg, 100)
+    d = diagnostics(state, cfg)
+    assert d["wall_flux/e"] > 0
+    assert d["count/e"] < 2048
+    assert np.isfinite(d["wall_flux/e"])
+
+
+def test_energy_sane_in_field_run():
+    """Electrostatic run stays numerically stable (no NaN/explosion)."""
+    cfg = PicConfig(n_cells=128, capacity=1 << 12, n_electrons=2048,
+                    n_ions=2048, n_neutrals=8, field_solve=True,
+                    smoothing=True, dt=5e-4, rate_R=0.0)
+    state = pic_run_chunk(init_sim(cfg, jax.random.PRNGKey(2)), cfg, 200)
+    v = np.asarray(state.electrons.v)
+    assert np.isfinite(v).all()
+    assert np.abs(v).max() < 1e3

@@ -1,0 +1,82 @@
+"""Mamba2 SSD: chunked == recurrent; seq == step-by-step decode."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import (init_mamba2, mamba2_seq, mamba2_step,
+                              ssd_chunked, ssd_recurrent_reference)
+
+
+def _inputs(key, b, s, h, p, n):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    D = jnp.ones((h,))
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 128])
+def test_chunked_equals_recurrent(chunk):
+    x, dt, A, B, C, D = _inputs(jax.random.PRNGKey(0), 2, 128, 4, 16, 8)
+    y1, f1 = ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    y2, f2 = ssd_recurrent_reference(x, dt, A, B, C, D)
+    assert jnp.max(jnp.abs(y1.astype(jnp.float32) -
+                           y2.astype(jnp.float32))) < 3e-2
+    assert jnp.max(jnp.abs(f1 - f2)) < 1e-3
+
+
+def test_initial_state_continuation():
+    """SSD over [0:64]+[64:128] with carried state == SSD over [0:128]."""
+    x, dt, A, B, C, D = _inputs(jax.random.PRNGKey(1), 1, 128, 2, 8, 4)
+    y_full, f_full = ssd_chunked(x, dt, A, B, C, D, chunk=32)
+    y1, f1 = ssd_chunked(x[:, :64], dt[:, :64], A, B[:, :64], C[:, :64], D,
+                         chunk=32)
+    y2, f2 = ssd_chunked(x[:, 64:], dt[:, 64:], A, B[:, 64:], C[:, 64:], D,
+                         chunk=32, initial_state=f1)
+    y_cat = jnp.concatenate([y1, y2], axis=1)
+    assert jnp.max(jnp.abs(y_cat.astype(jnp.float32) -
+                           y_full.astype(jnp.float32))) < 3e-2
+    assert jnp.max(jnp.abs(f2 - f_full)) < 1e-3
+
+
+def test_block_seq_matches_step_decode():
+    cfg = ModelConfig(name="m", family="ssm", n_layers=1, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=64,
+                      ssm_state=8, ssm_headdim=16)
+    key = jax.random.PRNGKey(2)
+    p = init_mamba2(key, cfg)
+    B, S = 2, 24
+    u = jax.random.normal(key, (B, S, cfg.d_model)).astype(jnp.bfloat16)
+    y_seq, (state, tails) = mamba2_seq(p, u, cfg=cfg, chunk=8)
+    K = cfg.ssm_conv
+    st = jnp.zeros((B, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                   jnp.float32)
+    tls = (jnp.zeros((B, K - 1, cfg.d_inner), jnp.bfloat16),
+           jnp.zeros((B, K - 1, cfg.ssm_state), jnp.bfloat16),
+           jnp.zeros((B, K - 1, cfg.ssm_state), jnp.bfloat16))
+    outs = []
+    for t in range(S):
+        yt, (st, tls) = mamba2_step(p, u[:, t:t + 1], st, tls, cfg=cfg)
+        outs.append(yt)
+    y_dec = jnp.concatenate(outs, axis=1)
+    err = jnp.max(jnp.abs((y_seq - y_dec).astype(jnp.float32)))
+    assert err < 5e-2, err
+    assert jnp.max(jnp.abs(st.astype(jnp.float32) -
+                           state.astype(jnp.float32))) < 2e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([32, 64, 96]), chunk=st.sampled_from([16, 32]),
+       seed=st.integers(0, 1000))
+def test_property_chunk_invariance(s, chunk, seed):
+    """y must not depend on the chunk size."""
+    x, dt, A, B, C, D = _inputs(jax.random.PRNGKey(seed), 1, s, 2, 8, 4)
+    y1, _ = ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    y2, _ = ssd_chunked(x, dt, A, B, C, D, chunk=s)
+    assert jnp.max(jnp.abs(y1.astype(jnp.float32) -
+                           y2.astype(jnp.float32))) < 3e-2
