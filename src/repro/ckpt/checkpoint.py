@@ -65,8 +65,14 @@ def _leaf_chunks(arr: np.ndarray, n_ranks: int):
 
 def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
                     engine_config: EngineConfig = EngineConfig(),
-                    extra_attrs: Optional[dict] = None) -> pathlib.Path:
-    """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename)."""
+                    extra_attrs: Optional[dict] = None,
+                    async_io: bool = False) -> pathlib.Path:
+    """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename).
+
+    With `async_io` the write goes through the AsyncBpWriter pipeline;
+    fsync_policy is still forced to "step", which the async engine honours
+    with a BLOCKING seal — so by the time the .tmp is renamed the step's
+    md.idx record is durable either way."""
     directory = pathlib.Path(str(directory))
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}.bp4"
@@ -76,27 +82,40 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
 
     flat = flatten_state(state)
     import dataclasses as _dc
-    w = BpWriter(tmp, n_io_ranks,
-                 _dc.replace(engine_config, fsync_policy="step"))
-    w.begin_step(step)
-    w.set_attribute("checkpoint/step", step)
-    w.set_attribute("checkpoint/n_leaves", len(flat))
-    for k, v in (extra_attrs or {}).items():
-        w.set_attribute(k, v)
-    for name, leaf in flat.items():
-        if hasattr(leaf, "addressable_shards") and len(leaf.addressable_shards) > 1:
-            gshape = tuple(leaf.shape)
-            for sh in leaf.addressable_shards:
-                off = tuple(sl.start or 0 for sl in sh.index) if sh.index else ()
-                w.put(f"state/{name}", _to_storage(np.asarray(sh.data)),
-                      global_shape=gshape, offset=off, rank=sh.device.id)
-        else:
-            host = _to_storage(np.asarray(jax.device_get(leaf)))
-            gshape = host.shape if host.ndim else (1,)
-            for r, off, chunk in _leaf_chunks(host, n_io_ranks):
-                w.put(f"state/{name}", chunk, global_shape=gshape,
-                      offset=off, rank=r)
-    prof = w.end_step()
+    cfg = _dc.replace(engine_config, fsync_policy="step")
+    if async_io:
+        from repro.core.async_engine import AsyncBpWriter
+        w = AsyncBpWriter(tmp, n_io_ranks, cfg)
+    else:
+        w = BpWriter(tmp, n_io_ranks, cfg)
+    try:
+        w.begin_step(step)
+        w.set_attribute("checkpoint/step", step)
+        w.set_attribute("checkpoint/n_leaves", len(flat))
+        for k, v in (extra_attrs or {}).items():
+            w.set_attribute(k, v)
+        for name, leaf in flat.items():
+            if hasattr(leaf, "addressable_shards") and len(leaf.addressable_shards) > 1:
+                gshape = tuple(leaf.shape)
+                for sh in leaf.addressable_shards:
+                    off = tuple(sl.start or 0 for sl in sh.index) if sh.index else ()
+                    w.put(f"state/{name}", _to_storage(np.asarray(sh.data)),
+                          global_shape=gshape, offset=off, rank=sh.device.id)
+            else:
+                host = _to_storage(np.asarray(jax.device_get(leaf)))
+                gshape = host.shape if host.ndim else (1,)
+                for r, off, chunk in _leaf_chunks(host, n_io_ranks):
+                    w.put(f"state/{name}", chunk, global_shape=gshape,
+                          offset=off, rank=r)
+        w.end_step()
+    except BaseException:
+        # a failed save must not leak the writer thread / open md handles;
+        # the ORIGINAL error is what propagates
+        try:
+            w.close()
+        except BaseException:        # noqa: BLE001
+            pass
+        raise
     w.close()
     if final.exists():
         shutil.rmtree(final)

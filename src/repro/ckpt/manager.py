@@ -2,19 +2,24 @@
 
 Fault-tolerance contract (DESIGN.md §6):
   * training never blocks on storage — save() snapshots the state to host
-    (device->host copy) and hands it to a writer thread,
+    (device->host copy) and hands it to a writer thread; the checkpoint
+    write (through the JBP async pipeline when `engine_async`) then
+    OVERLAPS the next train step, and `wait()` is the barrier that
+    re-serialises producer and writer,
   * a checkpoint becomes visible only after its atomic rename; a crash
     mid-write leaves a .tmp the next run ignores,
   * restore_latest() walks checkpoints newest-first and returns the first
     one whose md.idx validates (torn/corrupt ones are skipped),
-  * keep_n retention deletes old checkpoints only AFTER a newer one is
-    durable.
+  * keep_n retention runs behind the durability barrier: old checkpoints
+    are evicted only AFTER the newer one's sealed md.idx + rename — the
+    same wait()-before-eviction ordering the writer job enforces in-line.
 """
 from __future__ import annotations
 
 import pathlib
 import shutil
 import threading
+import time
 from typing import Optional
 
 import jax
@@ -28,7 +33,12 @@ class CheckpointManager:
     def __init__(self, directory, *, every: int = 100, keep_n: int = 3,
                  n_io_ranks: int = 8,
                  engine_config: EngineConfig = EngineConfig(),
-                 async_write: bool = True):
+                 async_write: bool = True, engine_async: bool = False):
+        # async_write is what hides checkpoint I/O behind the next train
+        # step (the writer thread). engine_async additionally routes the
+        # write through AsyncBpWriter — correctness-neutral (checkpoints
+        # force fsync_policy="step", a blocking seal), useful when shared
+        # pipeline profiling is wanted; off by default.
         self.dir = pathlib.Path(str(directory))
         self.dir.mkdir(parents=True, exist_ok=True)
         self.every = every
@@ -36,21 +46,34 @@ class CheckpointManager:
         self.n_io_ranks = n_io_ranks
         self.engine_config = engine_config
         self.async_write = async_write
+        self.engine_async = engine_async
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self.saved_steps: list[int] = []
+        # overlap accounting: how long save()/wait() actually stalled the
+        # producer vs how long the background writes took
+        self.stats = {"saves": 0, "blocked_s": 0.0, "write_s": 0.0}
 
     # ----------------------------------------------------------------- save
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.every == 0
 
     def wait(self):
+        """Barrier: the in-flight checkpoint (if any) is durable on return.
+        Must run before eviction and before the manager is torn down."""
+        t0 = time.perf_counter()
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+            self.stats["blocked_s"] += time.perf_counter() - t0
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+    def overlap_fraction(self) -> float:
+        """Share of checkpoint write time hidden behind training compute."""
+        w = self.stats["write_s"]
+        return max(0.0, 1.0 - self.stats["blocked_s"] / w) if w > 0 else 0.0
 
     def save(self, state, step: int, *, force: bool = False):
         if not force and not self.should_save(step):
@@ -61,19 +84,27 @@ class CheckpointManager:
 
         def job():
             try:
+                t0 = time.perf_counter()
                 CK.save_checkpoint(self.dir, host_state, step,
                                    n_io_ranks=self.n_io_ranks,
-                                   engine_config=self.engine_config)
+                                   engine_config=self.engine_config,
+                                   async_io=self.engine_async)
+                self.stats["write_s"] += time.perf_counter() - t0
                 self.saved_steps.append(step)
+                # durability barrier passed (sealed md.idx + rename above):
+                # only now may older checkpoints be evicted
                 self._retain()
             except BaseException as e:               # noqa: BLE001
                 self._error = e
 
+        self.stats["saves"] += 1
         if self.async_write:
             self._thread = threading.Thread(target=job, daemon=True)
             self._thread.start()
         else:
-            job()
+            t0 = time.perf_counter()
+            job()                    # inline write: all of it blocks training
+            self.stats["blocked_s"] += time.perf_counter() - t0
         return True
 
     def _retain(self):

@@ -1,0 +1,176 @@
+"""Async double-buffered write pipeline for the JBP engine (paper §V).
+
+The paper's throughput story is that I/O must become a *background
+activity*: the PIC cycle keeps pushing/depositing while the previous step's
+diagnostics are still being compressed, aggregated and appended. The sync
+`BpWriter` stalls the producer for the whole of `end_step()`;
+`AsyncBpWriter` splits the step into
+
+    producer thread                      writer thread
+    ---------------                      -------------
+    put() ... put()
+    end_step(blocking=False)
+      -> _take_snapshot(copy=True)
+      -> bounded in-flight queue  ---->  _write_step(snapshot):
+    (compute next step overlaps)           compress -> aggregator assignment
+                                           -> subfile appends -> md.0 append
+                                           -> crc-sealed md.idx record
+
+Snapshots are deep copies, so the producer may reuse its buffers the moment
+`end_step` returns (the relaxation of the openPMD "unmodified until flush"
+contract that makes overlap possible). The queue is bounded
+(`queue_depth`, default 2): when the writer falls behind, `end_step`
+BLOCKS, so at most `queue_depth` snapshots sit queued plus one being
+written — the producer never runs more than `queue_depth + 1` steps ahead
+of storage, which bounds peak host memory at `queue_depth + 1` step
+payloads (back-pressure, like SST's reliable mode).
+
+Ordering + durability: a single dedicated writer thread pops snapshots
+FIFO, so md.0/md.idx grow in submission order and the on-disk layout is
+byte-identical to a sync write of the same puts (data.* and md.0 exactly;
+md.idx differs only in its wall-clock timestamp field). A step is durable
+iff its crc-sealed md.idx record validates — unchanged from BpWriter.
+`fsync_policy="step"` implies a BLOCKING seal: `end_step` waits until the
+background fsync of md.0+md.idx has completed, so checkpoint writers keep
+their crash-consistency guarantee.
+
+`profiling.json` gains per-step `backlog` / `queue_wait_s` /
+`queue_delay_s` fields and an `"async"` summary with the compute-overlap
+fraction (what share of write time the producer did NOT spend blocked).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+from repro.core.bp_engine import BpWriter, EngineConfig
+
+
+class AsyncBpWriter(BpWriter):
+    """Drop-in BpWriter with a background write pipeline.
+
+    end_step(blocking=False) -> snapshot + enqueue, returns a placeholder
+                                profile ({"queued": True, ...}).
+    end_step(blocking=True)  -> waits for the step's seal; returns the real
+                                profile (forced when fsync_policy="step").
+    drain()                  -> barrier: every queued step sealed on disk.
+    close()                  -> drain, stop the writer thread, then the
+                                normal BpWriter close (fsync + profiling).
+    """
+
+    def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig(),
+                 *, queue_depth: int = 2):
+        super().__init__(path, n_ranks, cfg)
+        self.queue_depth = max(1, int(queue_depth))
+        self._q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
+        self._writer_error: Optional[BaseException] = None
+        self._stats_lock = threading.Lock()
+        self._blocked_s = 0.0          # producer time lost to back-pressure/seals
+        self._closed = False
+        self._writer_thread = threading.Thread(
+            target=self._writer_loop, name="jbp-async-seal", daemon=True)
+        self._writer_thread.start()
+
+    # -------------------------------------------------------------- producer
+    def end_step(self, blocking: bool = False) -> dict:
+        if self.cfg.fsync_policy == "step":
+            blocking = True            # durable seal must precede the return
+        # a blocking end_step holds the producer until the write completes,
+        # so the chunk views stay valid — skip the deep copy (checkpoints
+        # of model-sized state must not double peak host memory)
+        snap = self._take_snapshot(copy=not blocking)
+        # snapshot FIRST, error check second: like the sync writer, a
+        # failing end_step discards the step and leaves the engine ready
+        # for begin_step — it must not wedge the producer protocol
+        self._check_error()
+        snap.extra["backlog"] = self._q.qsize()
+        snap.extra["t_submit"] = time.perf_counter()
+        sealed = threading.Event()
+        holder: dict = {}
+        t0 = time.perf_counter()
+        self._q.put((snap, sealed, holder))    # blocks when queue_depth deep
+        queue_wait = time.perf_counter() - t0
+        if blocking:
+            sealed.wait()
+        blocked = (time.perf_counter() - t0) if blocking else queue_wait
+        with self._stats_lock:
+            self._blocked_s += blocked
+        if blocking:
+            self._check_error()
+            return holder["prof"]
+        return {"step": snap.step, "queued": True,
+                "backlog": snap.extra["backlog"], "queue_wait_s": queue_wait}
+
+    def drain(self):
+        """Barrier: returns once every submitted step is written AND sealed
+        (its md.idx record on disk per the engine's fsync policy)."""
+        t0 = time.perf_counter()
+        self._q.join()
+        with self._stats_lock:
+            self._blocked_s += time.perf_counter() - t0
+        self._check_error()
+
+    def close(self):
+        """Drain, stop the writer thread, then the normal BpWriter close.
+        A failed background write must NOT leak the thread or the md.0/
+        md.idx handles: shutdown always completes, the error is raised
+        once at the end (subsequent close() calls are no-ops)."""
+        if self._closed:
+            return
+        try:
+            t0 = time.perf_counter()
+            self._q.join()             # like drain(), but never raises early
+            with self._stats_lock:
+                self._blocked_s += time.perf_counter() - t0
+        finally:
+            self._closed = True
+            self._q.put(None)          # queue empty post-join: never blocks
+            self._writer_thread.join(timeout=10.0)
+            super().close()
+        self._check_error()
+
+    # ---------------------------------------------------------------- writer
+    def _writer_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            snap, sealed, holder = item
+            try:
+                # after a failed step, later queued snapshots are DROPPED,
+                # not written: sealing step N+1 when step N is missing would
+                # present a gapped series as durable — a sync writer raises
+                # at N and never reaches N+1, and async must match
+                if self._writer_error is None:
+                    snap.extra["queue_delay_s"] = (time.perf_counter() -
+                                                   snap.extra.pop("t_submit"))
+                    holder["prof"] = self._write_step(snap)
+            except BaseException as e:     # noqa: BLE001 — surfaced to producer
+                self._writer_error = e     # first failure is the root cause
+            finally:
+                sealed.set()
+                self._q.task_done()
+
+    def _check_error(self):
+        if self._writer_error is not None:
+            raise self._writer_error
+
+    # -------------------------------------------------------------- profiling
+    def _profile_doc(self) -> dict:
+        doc = super()._profile_doc()
+        write_s = sum(p.get("write_s", 0.0) for p in self._profile)
+        with self._stats_lock:
+            blocked = self._blocked_s
+        overlap = max(0.0, 1.0 - blocked / write_s) if write_s > 0 else 0.0
+        doc["async"] = {"queue_depth": self.queue_depth,
+                        "producer_blocked_s": blocked,
+                        "write_s": write_s,
+                        "overlap_fraction": overlap}
+        return doc
+
+    def overlap_stats(self) -> dict:
+        """Live view of the compute/I-O overlap accounting."""
+        return dict(self._profile_doc()["async"], steps=len(self._profile))

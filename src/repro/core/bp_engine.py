@@ -22,6 +22,17 @@ Reads never touch subfiles until the box intersection says so: md.idx ->
 md.0 -> exact byte ranges. Arbitrary box selections let a restarted job
 with a different mesh read exactly the bytes each new shard needs
 (elastic re-sharding).
+
+Async pipeline: `end_step()` is factored into `_take_snapshot()` (capture
+the step's chunks + attrs) and `_write_step(snapshot)` (compress, assign
+aggregators, append subfiles, seal metadata). `BpWriter` runs both inline;
+`repro.core.async_engine.AsyncBpWriter` enqueues snapshots onto a bounded
+in-flight queue and runs `_write_step` on a background writer thread, so
+computation overlaps I/O. Durability semantics are IDENTICAL in both modes:
+a step is durable iff its crc-sealed md.idx record validates, sync and
+async writers produce byte-identical data.* and md.0 files for the same
+puts, and `fsync_policy="step"` always means the seal (fsync of md.0 and
+md.idx) has happened before `end_step` returns to the producer.
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ import dataclasses
 import json
 import pathlib
 import struct
+import threading
 import time
 import zlib
 from typing import Any, Optional
@@ -75,6 +87,18 @@ class ChunkMeta:
                 "foff": self.file_offset, "nbytes": self.nbytes}
 
 
+@dataclasses.dataclass
+class StepSnapshot:
+    """One step's puts, captured at end_step time — the unit of work handed
+    to `_write_step`. The sync writer builds one and writes it inline; the
+    async writer deep-copies chunk arrays (`copy=True`) so the producer may
+    reuse its buffers immediately, and queues it for the background seal."""
+    step: int
+    pending: dict[str, dict]
+    attrs: dict[str, Any]
+    extra: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 class BpWriter:
     def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig()):
         self.path = pathlib.Path(str(path))
@@ -99,15 +123,12 @@ class BpWriter:
         self._pending: dict[str, dict] = {}
         self._attrs: dict[str, Any] = {}
         self._profile: list[dict] = []
-        self._errors: list = []
 
     # ------------------------------------------------------------------ step
     def begin_step(self, step: int):
         assert self._step is None, "previous step not closed"
         self._step = step
         self._pending = {}
-        self._t_step = time.perf_counter()
-        self._t_comp = 0.0
 
     def set_attribute(self, name: str, value):
         self._attrs[name] = value
@@ -123,20 +144,42 @@ class BpWriter:
         assert var["shape"] == tuple(int(x) for x in global_shape), name
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
 
+    def _take_snapshot(self, *, copy: bool) -> StepSnapshot:
+        """Capture the open step and reset producer-side state. With
+        `copy=True` chunk arrays are deep-copied (the async contract: the
+        caller may mutate its buffers the moment end_step returns)."""
+        assert self._step is not None, "end_step() outside begin_step()"
+        pending = self._pending
+        if copy:
+            pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
+                              "chunks": [(r, off, np.array(arr))
+                                         for r, off, arr in var["chunks"]]}
+                       for name, var in pending.items()}
+        snap = StepSnapshot(self._step, pending, dict(self._attrs))
+        self._step = None
+        self._pending = {}
+        return snap
+
     def end_step(self) -> dict:
-        assert self._step is not None
-        step = self._step
+        return self._write_step(self._take_snapshot(copy=False))
+
+    def _write_step(self, snap: StepSnapshot) -> dict:
+        """Compress + aggregate + append + seal one snapshot. Must be called
+        from ONE thread at a time (the caller thread here; the dedicated
+        writer thread in AsyncBpWriter) — md.0/md.idx appends are ordered."""
+        step = snap.step
         t0 = time.perf_counter()
-        results: dict[str, list[ChunkMeta]] = {n: [] for n in self._pending}
-        import threading
+        results: dict[str, list[ChunkMeta]] = {n: [] for n in snap.pending}
         lock = threading.Lock()
+        errors: list = []
+        tcomp_total = [0.0]
 
         # Coalesce: one job per aggregator compresses its ranks' chunks and
         # issues a SINGLE append (one write syscall per aggregator per step
         # instead of one per chunk — §Perf hillclimb C iteration r6).
         by_agg: dict[int, list] = {}
         n_bytes_raw = 0
-        for name, var in self._pending.items():
+        for name, var in snap.pending.items():
             for rank, offset, arr in var["chunks"]:
                 n_bytes_raw += arr.nbytes
                 agg = aggregator_of(rank, self.n_ranks, self.m)
@@ -154,7 +197,7 @@ class BpWriter:
                 tcomp = time.perf_counter() - tc
                 base = self.subfiles.append(agg, b"".join(payloads))
             except Exception as e:   # noqa: BLE001
-                self._errors.append(e)
+                errors.append(e)
                 return
             with lock:
                 off = base
@@ -162,24 +205,24 @@ class BpWriter:
                     results[name].append(ChunkMeta(rank, offset, shape, agg,
                                                    off, nb))
                     off += nb
-                self._t_comp += tcomp
+                tcomp_total[0] += tcomp
 
         for agg, items in by_agg.items():
             self.pool.submit(agg_job, agg, items)
         self.pool.drain()
-        if self._errors:
-            raise self._errors[0]
+        if errors:
+            raise errors[0]
 
         # ---- metadata record (md.0), then sealed index record (md.idx) ------
         md_rec = {
             "step": step,
-            "attrs": self._attrs,
+            "attrs": snap.attrs,
             "vars": {
                 name: {"dtype": var["dtype"], "shape": list(var["shape"]),
                        "chunks": [c.to_json() for c in
                                   sorted(results[name],
                                          key=lambda c: (c.rank, c.offset))]}
-                for name, var in self._pending.items()},
+                for name, var in snap.pending.items()},
         }
         blob = json.dumps(md_rec).encode()
         self._md.write(blob)
@@ -197,15 +240,18 @@ class BpWriter:
         self._md_off += len(blob)
 
         dt = time.perf_counter() - t0
-        prof = {"step": step, "write_s": dt, "compress_s": self._t_comp,
+        prof = {"step": step, "write_s": dt, "compress_s": tcomp_total[0],
                 "bytes_raw": n_bytes_raw,
                 "bytes_stored": sum(c.nbytes for cl in results.values()
                                     for c in cl),
                 "aggregators": self.m}
+        prof.update(snap.extra)
         self._profile.append(prof)
-        self._step = None
-        self._pending = {}
         return prof
+
+    def _profile_doc(self) -> dict:
+        return {"engine": "JBP(BP4)", "aggregators": self.m,
+                "codec": self.cfg.codec, "steps": self._profile}
 
     def close(self):
         self.pool.shutdown()
@@ -217,10 +263,7 @@ class BpWriter:
         self._idx.close()
         if self.cfg.profiling:
             with open_file(self.path / "profiling.json", "w", rank=0) as f:
-                f.write(json.dumps({"engine": "JBP(BP4)",
-                                    "aggregators": self.m,
-                                    "codec": self.cfg.codec,
-                                    "steps": self._profile}, indent=1))
+                f.write(json.dumps(self._profile_doc(), indent=1))
 
 
 class BpReader:

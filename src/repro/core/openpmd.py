@@ -14,6 +14,17 @@ protocol the paper describes in §III-A/B:
 
 Group-based iteration encoding with steps: one BP directory, one engine
 step per iteration (the paper's chosen memory strategy).
+
+Async I/O: `Series(..., async_io=True)` swaps the sync BpWriter for an
+`AsyncBpWriter` — `flush()` then only SNAPSHOTS the dirty record components
+(deep copy) and enqueues the step on a bounded in-flight queue, returning
+before compression or any filesystem write happens. The background pipeline
+seals steps in flush order with the same crc'd md.idx protocol, so
+durability semantics are unchanged: a flushed iteration is durable once its
+index record is on disk, `Series.drain()` is the barrier that guarantees it
+for every queued step, and `close()` implies `drain()`. The openPMD "chunks
+stay unmodified until flush" contract thereby RELAXES to "until end of
+flush()": the caller may reuse buffers as soon as flush returns.
 """
 from __future__ import annotations
 
@@ -154,13 +165,17 @@ class Series:
 
     def __init__(self, path, mode: str = "w", *, n_ranks: int = 1,
                  engine_config: EngineConfig = EngineConfig(),
-                 meta: Optional[dict] = None):
+                 meta: Optional[dict] = None, async_io: bool = False,
+                 queue_depth: int = 2):
         self.path = pathlib.Path(str(path))
         self.mode = mode
         self.n_ranks = n_ranks
         self.engine_config = engine_config
+        self.async_io = async_io
+        self.queue_depth = queue_depth
         self.iterations = _Container(lambda k: Iteration(k, self))
         self._dirty: set[RecordComponent] = set()
+        self._closed = False
         self._writer: Optional[BpWriter] = None
         self._reader_obj: Optional[BpReader] = None
         self._open_step: Optional[int] = None
@@ -181,8 +196,19 @@ class Series:
 
     # ----------------------------------------------------------------- write
     def _get_writer(self) -> BpWriter:
+        if self._closed:
+            # constructing a new writer on an already-written path would
+            # reopen md.0/md.idx with "wb" and truncate sealed iterations
+            raise RuntimeError(f"Series {self.path} is closed")
         if self._writer is None:
-            self._writer = BpWriter(self.path, self.n_ranks, self.engine_config)
+            if self.async_io:
+                from repro.core.async_engine import AsyncBpWriter
+                self._writer = AsyncBpWriter(self.path, self.n_ranks,
+                                             self.engine_config,
+                                             queue_depth=self.queue_depth)
+            else:
+                self._writer = BpWriter(self.path, self.n_ranks,
+                                        self.engine_config)
             for k, v in self.attributes.items():
                 self._writer.set_attribute(k, v)
         return self._writer
@@ -211,11 +237,29 @@ class Series:
         self._dirty.clear()
         return prof
 
+    def drain(self):
+        """Durability barrier: with async_io, block until every flushed
+        iteration's md.idx record is sealed on disk. No-op for sync."""
+        if self._writer is not None and hasattr(self._writer, "drain"):
+            self._writer.drain()
+
     def close(self):
-        self.flush()
-        if self._writer is not None:
-            self._writer.close()
-            self._writer = None
+        """Flush remaining iterations and shut the engine down. The writer
+        is ALWAYS closed (thread + md handles released) even when a flush
+        or a queued async write failed — the error still propagates, and
+        the series is dead afterwards: a later flush()/close() is a no-op
+        (it must never construct a fresh writer on the same path, which
+        would truncate the sealed iterations already on disk)."""
+        if self._closed:
+            return
+        try:
+            self.flush()
+        finally:
+            self._closed = True
+            self._dirty.clear()
+            if self._writer is not None:
+                w, self._writer = self._writer, None
+                w.close()            # async: drains; cleanup-then-raise
 
     # ------------------------------------------------------------------ read
     def _reader(self) -> BpReader:

@@ -7,6 +7,13 @@ the same put()/step protocol as BpWriter, so a Series can stream iterations
 to an in-process consumer (live diagnostics, training-metric dashboards)
 WITHOUT touching the filesystem. Back-pressure blocks the producer when the
 consumer lags (queue_depth), exactly like SST's reliable mode.
+
+Tee-to-disk: pass `tee=AsyncBpWriter(...)` and every streamed step is ALSO
+forwarded chunk-for-chunk into the write pipeline from the same snapshot —
+streaming consumers and BP4 persistence share one capture of the data, and
+because the tee's end_step is non-blocking the producer still only pays the
+in-memory assembly cost. `close()` drains and closes the tee, so a closed
+stream implies the teed series is durable.
 """
 from __future__ import annotations
 
@@ -18,11 +25,12 @@ import numpy as np
 
 
 class SstStream:
-    def __init__(self, queue_depth: int = 4):
+    def __init__(self, queue_depth: int = 4, *, tee=None):
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._step: Optional[int] = None
         self._pending: dict[str, dict] = {}
         self._closed = threading.Event()
+        self._tee = tee                  # BpWriter-protocol sink (async ok)
 
     # ------------------------------------------------------------- producer
     def begin_step(self, step: int):
@@ -37,26 +45,47 @@ class SstStream:
         var = self._pending.setdefault(name, {
             "dtype": a.dtype, "global_shape": tuple(global_shape or a.shape),
             "chunks": []})
-        var["chunks"].append((tuple(offset or (0,) * a.ndim), a))
+        var["chunks"].append((tuple(offset or (0,) * a.ndim), rank, a))
 
     def end_step(self):
         """Assemble the step's variables and hand them to the consumer
-        (blocks when the consumer is queue_depth behind)."""
+        (blocks when the consumer is queue_depth behind). The same snapshot
+        feeds the tee writer, if any."""
         step = self._step
         out: dict[str, np.ndarray] = {}
         for name, var in self._pending.items():
             g = np.zeros(var["global_shape"], var["dtype"])
-            for off, arr in var["chunks"]:
+            for off, _rank, arr in var["chunks"]:
                 sl = tuple(slice(o, o + s) for o, s in zip(off, arr.shape))
                 g[sl] = arr
             out[name] = g
+        tee_exc = None
+        if self._tee is not None:
+            try:
+                self._tee.begin_step(step)
+                for name, var in self._pending.items():
+                    for off, rank, arr in var["chunks"]:
+                        self._tee.put(name, arr,
+                                      global_shape=var["global_shape"],
+                                      offset=off, rank=rank)
+                self._tee.end_step()
+            except BaseException as e:     # noqa: BLE001
+                tee_exc = e                # persistence failed — stream on
         self._q.put((step, out))
         self._step = None
         self._pending = {}
+        if tee_exc is not None:
+            # the consumer got its step and the stream stays usable; the
+            # producer still learns that persistence is broken
+            raise tee_exc
 
     def close(self):
         self._closed.set()
         self._q.put(None)
+        if self._tee is not None:
+            # AsyncBpWriter.close() drains, always completes its cleanup
+            # (thread + file handles) and only then raises any write error
+            self._tee.close()
 
     # ------------------------------------------------------------- consumer
     def steps(self, timeout: Optional[float] = None) -> Iterator[tuple]:

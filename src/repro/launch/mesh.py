@@ -9,6 +9,18 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across JAX versions: newer releases take (and want)
+    explicit axis_types; older ones (<= 0.4.x) reject the kwarg and have no
+    jax.sharding.AxisType at all."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -17,8 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_debug_mesh(*, multi_pod: bool = False, devices=None):
@@ -33,8 +44,7 @@ def make_debug_mesh(*, multi_pod: bool = False, devices=None):
         assert n % 2 == 0, n
         shape = (n // 2, 2)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def mesh_summary(mesh) -> dict:

@@ -1,0 +1,103 @@
+"""Property-testing front door: real `hypothesis` when installed, else a
+minimal deterministic fallback shim with the same surface the suite uses
+(`given`, `settings`, `strategies.integers/sampled_from/binary/lists`).
+
+Import from here instead of `hypothesis` so tier-1 collection never
+hard-fails on the dependency:
+
+    from _propcheck import given, settings, strategies as st
+
+The shim draws `max_examples` pseudo-random examples from a fixed per-test
+seed (reproducible failures), biasing the first draws toward strategy
+corners (min/max sizes and values) where round-trip bugs live.
+"""
+from __future__ import annotations
+
+try:                                          # the real thing, if available
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def example(self, rng: random.Random, corner: bool):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=1 << 16):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng, corner):
+            if corner:
+                return rng.choice((self.lo, self.hi))
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng, corner):
+            return rng.choice(self.elements)
+
+    class _Binary(_Strategy):
+        def __init__(self, min_size=0, max_size=64):
+            self.lo, self.hi = int(min_size), int(max_size)
+
+        def example(self, rng, corner):
+            n = rng.choice((self.lo, self.hi)) if corner \
+                else rng.randint(self.lo, self.hi)
+            return rng.randbytes(n)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=8):
+            self.elem, self.lo, self.hi = elements, int(min_size), int(max_size)
+
+        def example(self, rng, corner):
+            n = rng.choice((self.lo, self.hi)) if corner \
+                else rng.randint(self.lo, self.hi)
+            return [self.elem.example(rng, False) for _ in range(n)]
+
+    class strategies:                          # noqa: N801 — mimic module
+        integers = _Integers
+        sampled_from = _SampledFrom
+        binary = _Binary
+        lists = _Lists
+
+    class _Settings:
+        def __init__(self, max_examples=100, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):                # decorator form: @settings(...)
+            fn._pc_settings = self
+            return fn
+
+    settings = _Settings
+
+    def given(**drawn):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_pc_settings", _Settings())
+                rng = random.Random(f"jbp:{fn.__module__}.{fn.__qualname__}")
+                for i in range(cfg.max_examples):
+                    ex = {k: s.example(rng, corner=i < 2)
+                          for k, s in drawn.items()}
+                    try:
+                        fn(*args, **kwargs, **ex)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({fn.__name__}): {ex!r}"
+                        ) from e
+                return None
+
+            # pytest must not see the drawn params as fixtures
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in drawn])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,307 @@
+"""Async double-buffered write pipeline: sync-equivalence, back-pressure,
+drain ordering, blocking seals, crash consistency, and the shared
+property-based box-selection round-trip over both writer classes."""
+import time
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core.async_engine import AsyncBpWriter
+from repro.core.bp_engine import (IDX_RECORD, IDX_SIZE, BpReader, BpWriter,
+                                  EngineConfig)
+
+
+def _write_series(cls, path, *, n_ranks=8, aggregators=3, codec="none",
+                  steps=3, fsync_policy="close", **kw):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3,
+                       fsync_policy=fsync_policy)
+    w = cls(path, n_ranks, cfg, **kw)
+    rng = np.random.default_rng(7)
+    truth = {}
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(n_ranks * 16, 4)).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16],
+                  global_shape=g.shape, offset=(r * 16, 0), rank=r)
+        w.end_step()
+    w.close()
+    return truth
+
+
+def _idx_records(path, *, zero_time=True):
+    raw = (path / "md.idx").read_bytes()
+    out = []
+    for i in range(0, len(raw) - IDX_SIZE + 1, IDX_SIZE):
+        rec = list(IDX_RECORD.unpack_from(raw, i))
+        if zero_time:
+            rec[5] = 0                      # wall-clock t_ns differs by run
+        out.append(tuple(rec))
+    return out
+
+
+# ------------------------------------------------------------ sync parity
+@pytest.mark.parametrize("codec", ["none", "blosc"])
+def test_async_output_byte_identical_to_sync(tmpdir_path, codec):
+    truth = _write_series(BpWriter, tmpdir_path / "sync.bp4", codec=codec)
+    _write_series(AsyncBpWriter, tmpdir_path / "async.bp4", codec=codec,
+                  queue_depth=2)
+    for name in ["data.0", "data.1", "data.2", "md.0"]:
+        a = (tmpdir_path / "sync.bp4" / name).read_bytes()
+        b = (tmpdir_path / "async.bp4" / name).read_bytes()
+        assert a == b, f"{name} differs between sync and async writes"
+    assert _idx_records(tmpdir_path / "sync.bp4") == \
+        _idx_records(tmpdir_path / "async.bp4")
+    r = BpReader(tmpdir_path / "async.bp4")
+    assert r.valid_steps() == [0, 1, 2]
+    for s, g in truth.items():
+        np.testing.assert_array_equal(r.read_var(s, "var/x"), g)
+
+
+def test_producer_buffer_reuse_is_safe(tmpdir_path):
+    """The async snapshot is a deep copy: mutating the put() buffer after
+    end_step must not corrupt the written step."""
+    w = AsyncBpWriter(tmpdir_path / "s.bp4", 1, EngineConfig())
+    buf = np.arange(8, dtype=np.float32)
+    w.begin_step(0)
+    w.put("v", buf, global_shape=(8,), offset=(0,), rank=0)
+    w.end_step()
+    buf[:] = -1.0                           # producer reuses its buffer
+    w.close()
+    np.testing.assert_array_equal(
+        BpReader(tmpdir_path / "s.bp4").read_var(0, "v"),
+        np.arange(8, dtype=np.float32))
+
+
+# ----------------------------------------------------------- back-pressure
+class _SlowWriter(AsyncBpWriter):
+    DELAY = 0.05
+
+    def _write_step(self, snap):
+        time.sleep(self.DELAY)
+        return super()._write_step(snap)
+
+
+def test_backpressure_bounds_in_flight_steps(tmpdir_path):
+    w = _SlowWriter(tmpdir_path / "s.bp4", 1, EngineConfig(), queue_depth=1)
+    waits = []
+    for s in range(4):
+        w.begin_step(s)
+        w.put("v", np.full(4, s, np.float32), global_shape=(4,),
+              offset=(0,), rank=0)
+        prof = w.end_step()
+        waits.append(prof["queue_wait_s"])
+        assert prof["backlog"] <= 1         # never > queue_depth in flight
+    w.close()
+    # first submit lands in an empty queue; later ones must wait for the
+    # slow writer to free a slot — that wait IS the back-pressure
+    assert waits[0] < _SlowWriter.DELAY / 2
+    assert max(waits[1:]) > _SlowWriter.DELAY / 2
+    assert BpReader(tmpdir_path / "s.bp4").valid_steps() == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------- drain ordering
+def test_drain_seals_all_steps_in_submission_order(tmpdir_path):
+    w = _SlowWriter(tmpdir_path / "s.bp4", 1, EngineConfig(), queue_depth=2)
+    for s in range(5):
+        w.begin_step(s)
+        w.put("v", np.full(4, s, np.float32), global_shape=(4,),
+              offset=(0,), rank=0)
+        w.end_step()
+    w.drain()                               # barrier: everything sealed now
+    steps_on_disk = [rec[0] for rec in _idx_records(tmpdir_path / "s.bp4")]
+    assert steps_on_disk == [0, 1, 2, 3, 4], "md.idx must grow in step order"
+    w.close()
+
+
+def test_fsync_step_policy_forces_blocking_seal(tmpdir_path):
+    w = AsyncBpWriter(tmpdir_path / "s.bp4", 1,
+                      EngineConfig(fsync_policy="step"))
+    w.begin_step(0)
+    w.put("v", np.arange(4, dtype=np.float32), global_shape=(4,), offset=(0,),
+          rank=0)
+    prof = w.end_step()                     # must return the SEALED profile
+    assert "queued" not in prof and prof["write_s"] > 0
+    # the idx record is already durable before close()
+    assert [r[0] for r in _idx_records(tmpdir_path / "s.bp4")] == [0]
+    w.close()
+
+
+def test_writer_error_propagates_to_producer(tmpdir_path):
+    w = AsyncBpWriter(tmpdir_path / "s.bp4", 4,
+                      EngineConfig(codec="no-such-codec"))
+    w.begin_step(0)
+    w.put("v", np.arange(4, dtype=np.float32), global_shape=(4,), offset=(0,),
+          rank=0)
+    w.end_step()
+    with pytest.raises(ValueError, match="unknown codec"):
+        w.drain()
+    # close() must still fully shut down (thread, file handles) and raise
+    # the error exactly once; after that it is a no-op
+    with pytest.raises(ValueError, match="unknown codec"):
+        w.close()
+    w.close()
+    assert not w._writer_thread.is_alive()
+
+
+# -------------------------------------------------------- crash consistency
+def test_truncated_idx_recovers_last_sealed_step(tmpdir_path):
+    """Crash mid-seal: md.idx ends in a torn record -> the reader must come
+    back with exactly the fully sealed prefix."""
+    truth = _write_series(AsyncBpWriter, tmpdir_path / "s.bp4", steps=3)
+    idxp = tmpdir_path / "s.bp4" / "md.idx"
+    raw = idxp.read_bytes()
+    assert len(raw) == 3 * IDX_SIZE
+    idxp.write_bytes(raw[:2 * IDX_SIZE + IDX_SIZE // 2])   # tear record 2
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0, 1]
+    np.testing.assert_array_equal(r.read_var(1, "var/x"), truth[1])
+
+
+def test_overlap_stats_in_profiling(tmpdir_path):
+    import json
+    _write_series(AsyncBpWriter, tmpdir_path / "s.bp4", steps=2)
+    doc = json.loads((tmpdir_path / "s.bp4" / "profiling.json").read_text())
+    assert doc["async"]["queue_depth"] >= 1
+    assert 0.0 <= doc["async"]["overlap_fraction"] <= 1.0
+    assert all("backlog" in s and "queue_delay_s" in s for s in doc["steps"])
+
+
+# ---------------------------------------- property: box-selection round-trip
+@pytest.mark.parametrize("writer_cls", [BpWriter, AsyncBpWriter])
+@settings(max_examples=15, deadline=None)
+@given(n_chunks=st.integers(1, 7), rows=st.integers(8, 80),
+       cols=st.integers(1, 6), box_seed=st.integers(0, 10_000),
+       codec=st.sampled_from(["none", "blosc"]))
+def test_property_box_selection_roundtrip(writer_cls, n_chunks, rows, cols,
+                                          box_seed, codec):
+    """Random row-chunk layouts written by either engine, arbitrary box
+    reads, checked against the dense reference array. (Uses its own tempdir
+    rather than a function-scoped fixture: hypothesis' health check forbids
+    fixtures inside @given.)"""
+    import pathlib
+    import shutil
+    import tempfile
+    rng = np.random.default_rng(box_seed)
+    dense = rng.normal(size=(rows, cols)).astype(np.float32)
+    bounds = np.unique(np.concatenate(
+        [[0, rows], rng.integers(0, rows + 1, n_chunks - 1)])).astype(int)
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="repro-propbox-"))
+    path = tmp / "p.bp4"
+    w = writer_cls(path, max(len(bounds) - 1, 1),
+                   EngineConfig(aggregators=2, codec=codec, workers=2))
+    w.begin_step(0)
+    for r, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        w.put("v", dense[lo:hi], global_shape=dense.shape, offset=(int(lo), 0),
+              rank=r)
+    w.end_step()
+    w.close()
+
+    try:
+        reader = BpReader(path)
+        np.testing.assert_array_equal(reader.read_var(0, "v"), dense)
+        for _ in range(4):
+            r0 = int(rng.integers(0, rows))
+            r1 = int(rng.integers(r0 + 1, rows + 1))
+            c0 = int(rng.integers(0, cols))
+            c1 = int(rng.integers(c0 + 1, cols + 1))
+            sel = reader.read_var(0, "v", offset=(r0, c0),
+                                  extent=(r1 - r0, c1 - c0))
+            np.testing.assert_array_equal(sel, dense[r0:r1, c0:c1])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_sst_tee_close_cleans_up_on_write_error(tmpdir_path):
+    """A failing tee must not leak the writer thread or file handles when
+    the stream closes; the error surfaces from close() exactly once."""
+    from repro.core.sst_engine import SstStream
+    tee = AsyncBpWriter(tmpdir_path / "tee.bp4", 1,
+                        EngineConfig(codec="no-such-codec"))
+    stream = SstStream(queue_depth=2, tee=tee)
+    stream.begin_step(0)
+    stream.put("n", np.ones(4, np.float32), global_shape=(4,), offset=(0,))
+    stream.end_step()
+    with pytest.raises(ValueError, match="unknown codec"):
+        stream.close()
+    assert not tee._writer_thread.is_alive()
+
+
+def test_failed_checkpoint_save_does_not_leak_writer(tmpdir_path):
+    """save_checkpoint with a broken engine must raise AND fully tear down
+    the async writer (thread + handles) — a long-running manager retrying
+    saves on persistent I/O errors must not accumulate leaked threads."""
+    import threading
+
+    from repro.ckpt.checkpoint import save_checkpoint
+    before = threading.active_count()
+    for _ in range(3):
+        with pytest.raises(ValueError, match="unknown codec"):
+            save_checkpoint(tmpdir_path, {"w": np.arange(64.0)}, 1,
+                            engine_config=EngineConfig(codec="no-such-codec"),
+                            async_io=True)
+    assert threading.active_count() <= before + 4   # WriterPool workers only
+    assert not any(t.name == "jbp-async-seal"
+                   for t in threading.enumerate() if t.is_alive())
+
+
+class _FailAtStep(AsyncBpWriter):
+    """Fails exactly one step's write — later steps must be dropped."""
+    FAIL_STEP = 1
+
+    def _write_step(self, snap):
+        if snap.step == self.FAIL_STEP:
+            raise OSError("injected ENOSPC")
+        return super()._write_step(snap)
+
+
+def test_no_sealed_steps_after_a_failed_step(tmpdir_path):
+    """Durability must match sync semantics: a sync writer raises at step N
+    and never writes N+1 — async must not seal a gapped series either."""
+    w = _FailAtStep(tmpdir_path / "s.bp4", 1, EngineConfig(), queue_depth=2)
+    for s in range(4):
+        w.begin_step(s)
+        w.put("v", np.full(4, s, np.float32), global_shape=(4,),
+              offset=(0,), rank=0)
+        try:
+            w.end_step()
+        except OSError:
+            break                       # producer may learn of it early
+    with pytest.raises(OSError, match="injected ENOSPC"):
+        w.close()
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0], \
+        "steps after the failure must be dropped, not sealed over a gap"
+
+
+def test_tee_error_does_not_wedge_the_stream(tmpdir_path):
+    """A broken tee surfaces its error to the producer, but the streaming
+    consumer keeps receiving steps and the stream remains usable."""
+    from repro.core.sst_engine import SstStream, attach_consumer
+    tee = AsyncBpWriter(tmpdir_path / "tee.bp4", 1,
+                        EngineConfig(codec="no-such-codec"))
+    stream = SstStream(queue_depth=4, tee=tee)
+    seen = {}
+    t = attach_consumer(stream, lambda s, data: seen.update({s: data}))
+    stream.begin_step(0)
+    stream.put("n", np.zeros(2, np.float32), global_shape=(2,), offset=(0,))
+    stream.end_step()                   # enqueues; failure is asynchronous
+    with pytest.raises(ValueError, match="unknown codec"):
+        tee.drain()                     # make the background failure visible
+    stream.begin_step(1)                # must NOT die on a stale _step
+    stream.put("n", np.ones(2, np.float32), global_shape=(2,), offset=(0,))
+    with pytest.raises(ValueError, match="unknown codec"):
+        stream.end_step()               # producer learns persistence broke
+    stream.begin_step(2)                # ...but the stream is NOT wedged
+    stream.put("n", np.full(2, 2, np.float32), global_shape=(2,),
+               offset=(0,))
+    with pytest.raises(ValueError, match="unknown codec"):
+        stream.end_step()
+    stream._tee = None                  # persistence is dead; stream is not
+    stream.close()
+    t.join(timeout=5)
+    assert sorted(seen) == [0, 1, 2], "consumer must see every step"
+    with pytest.raises(ValueError, match="unknown codec"):
+        tee.close()                     # cleanup completes, raises once

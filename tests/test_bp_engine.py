@@ -3,7 +3,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.aggregation import aggregator_of
 from repro.core.bp_engine import BpReader, BpWriter, EngineConfig, IDX_SIZE

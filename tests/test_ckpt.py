@@ -42,7 +42,8 @@ def test_bfloat16_roundtrip(tmpdir_path):
 
 def test_manager_retention_and_latest(tmpdir_path):
     cfg, state = _small_state()
-    mgr = CheckpointManager(tmpdir_path, every=1, keep_n=2, async_write=False)
+    mgr = CheckpointManager(tmpdir_path, every=1, keep_n=2, async_write=False,
+                            engine_async=True)   # AsyncBpWriter ckpt path
     for s in (1, 2, 3, 4):
         state = dict(state, step=jax.numpy.asarray(s))
         mgr.save(state, s)
@@ -84,14 +85,13 @@ def test_elastic_resharding_subprocess(tmpdir_path):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt.checkpoint import save_checkpoint, restore_sharded
 
-        mesh1 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh1 = compat_make_mesh((2, 2), ("data", "model"))
         sh1 = NamedSharding(mesh1, P("data", "model"))
         w = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8), sh1)
         save_checkpoint(r"{tmpdir_path}", {{"w": w}}, 3, n_io_ranks=4)
 
-        mesh2 = jax.make_mesh((4, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = compat_make_mesh((4, 1), ("data", "model"))
         sh2 = NamedSharding(mesh2, P("model", "data"))
         like = {{"w": jax.ShapeDtypeStruct((8, 8), np.float32)}}
         out, step = restore_sharded(r"{tmpdir_path}", like, {{"w": sh2}})

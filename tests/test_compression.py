@@ -1,7 +1,7 @@
 """Codec unit + property tests (blosc-style shuffle+LZ, bzip2, zlib, none)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import compression as C
 

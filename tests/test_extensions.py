@@ -52,7 +52,8 @@ def test_sst_streaming_roundtrip():
 
 def test_opt_moments_shard_over_pod():
     from repro.train.state import train_state_shardings
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = jax.sharding.AbstractMesh((("pod", 2), ("data", 16),
+                                      ("model", 16)))
     cfg = get_config("qwen3-4b")
     sh = train_state_shardings(cfg, mesh)
     m_spec = sh["opt"]["m"]["stack"]["layers"]["ffn"]["gate"]["w"].spec
@@ -80,7 +81,7 @@ def test_straggler_ost_absorbed_by_pool():
         cfg = EngineConfig(aggregators=4, workers=4,
                            stripe=StripeConfig(2, 1 << 16), n_osts=4)
         w = BpWriter(d / "s.bp4", 8, cfg)
-        w.subfiles._files[0].pool.slow_osts[0] = 0.02   # 20 ms/write on ost0
+        w.subfiles._files[0].pool.slow_osts[0] = 0.2    # 200 ms/write on ost0
         t0 = time.perf_counter()
         w.begin_step(0)
         rng = np.random.default_rng(0)
@@ -90,9 +91,12 @@ def test_straggler_ost_absorbed_by_pool():
         w.end_step()
         w.close()
         wall = time.perf_counter() - t0
-        # the slow aggregator pays ~2 writes x 20ms; others proceed in
-        # parallel — far below 8 ranks x serialized delay
-        assert wall < 1.0, wall
+        # the slow aggregator pays its ~200ms writes while the others
+        # proceed in parallel: absorbed wall measures ~0.75s. Fully
+        # serializing every stripe behind the slow OST would cost
+        # >= 8 x 2 x 200ms = 3.2s — the threshold sits under that with
+        # ~2s of headroom for scheduler stalls on noisy shared machines.
+        assert wall < 3.0, wall
     finally:
         shutil.rmtree(d, ignore_errors=True)
 

@@ -67,3 +67,54 @@ def test_flush_is_single_action(tmpdir_path):
     s.flush()
     assert (tmpdir_path / "a.bp4" / "md.idx").stat().st_size > 0
     s.close()
+
+
+def test_async_series_matches_sync(tmpdir_path):
+    """async_io=True: flush() snapshots + enqueues; drain() is the
+    durability barrier; on-disk data equals the sync series'."""
+    def fill(s):
+        for i in (0, 3, 7):
+            rc = s.iterations[i].meshes["n"][""]
+            rc.reset_dataset(np.float32, (16,))
+            rc.store_chunk(np.arange(16, dtype=np.float32) + i, offset=(0,))
+            s.flush()
+
+    sync = Series(tmpdir_path / "sync.bp4", "w")
+    fill(sync)
+    sync.close()
+    a = Series(tmpdir_path / "async.bp4", "w", async_io=True, queue_depth=2)
+    fill(a)
+    a.drain()                    # every flushed iteration sealed on disk
+    r = Series(tmpdir_path / "async.bp4", "r")
+    assert r.read_iterations() == [0, 3, 7]
+    a.close()
+    assert (tmpdir_path / "sync.bp4" / "md.0").read_bytes() == \
+        (tmpdir_path / "async.bp4" / "md.0").read_bytes()
+    assert (tmpdir_path / "sync.bp4" / "data.0").read_bytes() == \
+        (tmpdir_path / "async.bp4" / "data.0").read_bytes()
+    got = r._reader().read_var(7, "/data/7/meshes/n")
+    np.testing.assert_array_equal(got, np.arange(16, dtype=np.float32) + 7)
+
+
+def test_async_series_close_cleans_up_after_write_error(tmpdir_path):
+    """A failed background write must not leave Series.close() unable to
+    release the writer thread and metadata handles."""
+    import pytest
+    from repro.core.bp_engine import EngineConfig
+    s = Series(tmpdir_path / "bad.bp4", "w", async_io=True,
+               engine_config=EngineConfig(codec="no-such-codec"))
+    rc = s.iterations[0].meshes["x"][""]
+    rc.reset_dataset(np.float32, (4,))
+    rc.store_chunk(np.ones(4, np.float32), offset=(0,))
+    s.flush()
+    with pytest.raises(ValueError, match="unknown codec"):
+        s.close()
+    assert s._writer is None            # engine released despite the error
+    s.close()                           # second close is a clean no-op
+    # a closed series must NEVER construct a fresh writer on the same path
+    # (reopening md.0/md.idx "wb" would truncate sealed iterations)
+    rc2 = s.iterations[1].meshes["x"][""]
+    rc2.reset_dataset(np.float32, (4,))
+    rc2.store_chunk(np.ones(4, np.float32), offset=(0,))
+    with pytest.raises(RuntimeError, match="closed"):
+        s.flush()

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig
 from repro.models.ssm import (init_mamba2, mamba2_seq, mamba2_step,

@@ -1,7 +1,7 @@
 """Lustre-style striping: layout math, roundtrips, introspection."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.striping import OstPool, StripeConfig, StripedFile
 
