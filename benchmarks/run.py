@@ -1,11 +1,14 @@
 """Benchmark driver — one section per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
-Emits ``name,us_per_call,derived`` CSV rows.
+           [--json PATH]
+Emits ``name,us_per_call,derived`` CSV rows; --json additionally dumps the
+collected rows as a JSON document (the CI artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -15,10 +18,13 @@ def main(argv=None) -> None:
                     help="substring filter on benchmark module name")
     ap.add_argument("--quick", action="store_true",
                     help="smaller rank counts / payloads")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write collected rows as JSON")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_aggregators, bench_compression,
-                            bench_darshan_costs, bench_ior, bench_kernels,
+    from benchmarks import (bench_aggregators, bench_async_io,
+                            bench_compression, bench_darshan_costs,
+                            bench_insitu, bench_ior, bench_kernels,
                             bench_openpmd_io, bench_original_io,
                             bench_perf_io, bench_restart, bench_roofline,
                             bench_striping)
@@ -40,6 +46,13 @@ def main(argv=None) -> None:
         ("striping", lambda: bench_striping.run(
             n_ranks=16 if quick else 64,
             counts=(1, 4) if quick else (1, 2, 4, 8))),
+        ("async_io", lambda: bench_async_io.run(
+            steps=4 if quick else 8, repeats=2 if quick else 5,
+            codecs=("none",) if quick else ("none", "blosc"),
+            aggregator_counts=(1,) if quick else (1, 4))),
+        ("insitu", lambda: bench_insitu.run(
+            n_steps=40 if quick else 200, n_ranks=4 if quick else 8,
+            n_cells=1024 if quick else 4096)),
         ("kernels", bench_kernels.run),
         ("perf_io", bench_perf_io.run),
         ("restart", bench_restart.run),
@@ -54,6 +67,13 @@ def main(argv=None) -> None:
         except Exception as e:   # noqa: BLE001 — keep the suite running
             print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
             raise
+    if args.json:
+        from benchmarks import common
+        doc = {"quick": quick, "only": args.only,
+               "rows": [{"name": n, "us_per_call": us, "derived": d}
+                        for n, us, d in common.ROWS]}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
 
 
 if __name__ == "__main__":

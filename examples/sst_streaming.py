@@ -1,49 +1,68 @@
 """In-situ streaming (the paper's §VI future work, implemented): PIC
-diagnostics flow producer->consumer through the SST-style engine with NO
-filesystem in the loop — the consumer computes live ionization statistics
-while the simulation keeps stepping.
+diagnostics flow producer->consumer through the SST-style engine, a
+`repro.insitu` ReducerSet analyzes them live while the simulation keeps
+stepping, and a tee persists the same snapshots to a BP4 series. At the
+end the post-hoc replay over `BpReader` must match the live reduction
+EXACTLY (the insitu parity guarantee), and `jbpls` inspects the series
+from metadata alone.
 
     PYTHONPATH=src python examples/sst_streaming.py
 """
-import threading
+import tempfile
+from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.configs.bit1 import cpu_config
-from repro.core.sst_engine import SstStream, attach_consumer
-from repro.pic.simulation import diagnostics, init_sim, pic_run_chunk
+from repro.core.async_engine import AsyncBpWriter
+from repro.core.bp_engine import EngineConfig
+from repro.core.sst_engine import SstStream
+from repro.insitu import (FieldEnergy, Moments, ReducerSet, SpeciesCount,
+                          assert_parity, attach_reducers, reduce_posthoc)
+from repro.pic.simulation import init_sim, run_with_diagnostics
+from repro.tools import jbpls
+
+
+def make_reducers(cfg) -> ReducerSet:
+    return ReducerSet([
+        SpeciesCount("density/e", scale=cfg.dx, name="n_e"),
+        SpeciesCount("density/D", scale=cfg.dx, name="n_D"),
+        Moments("vdist/e", name="vdist_moments"),
+        FieldEnergy("density/e", cell_volume=cfg.dx, name="e_field_energy"),
+    ])
 
 
 def main():
     cfg = cpu_config(512)
-    stream = SstStream(queue_depth=2)
-    history = []
+    out = Path(tempfile.mkdtemp(prefix="repro-sst-")) / "insitu.bp4"
 
-    def consumer(step, data):
-        ne = float(data["density_e"].sum() * cfg.dx)
-        nn = float(data["density_D"].sum() * cfg.dx)
-        history.append((step, ne, nn))
-        print(f"  [consumer] step {step:5d}: n_e={ne:9.0f} n_D={nn:9.0f}")
+    # producer -> stream -> {live reducers, tee -> async BP4 series}
+    tee = AsyncBpWriter(out, n_ranks=4,
+                        cfg=EngineConfig(aggregators=2, codec="blosc"))
+    stream = SstStream(queue_depth=2, tee=tee)
+    live = make_reducers(cfg)
+    consumer = attach_reducers(stream, live)
 
-    t = attach_consumer(stream, consumer)
     state = init_sim(cfg, jax.random.PRNGKey(0))
-    for chunk in range(6):
-        state = pic_run_chunk(state, cfg, 100)
-        d = diagnostics(state, cfg)
-        stream.begin_step(int(state.step))
-        for name in ("density/e", "density/D"):
-            arr = d[name]
-            stream.put(name.replace("/", "_"), arr, global_shape=arr.shape,
-                       offset=(0,))
-        stream.end_step()
+    state = run_with_diagnostics(state, cfg, None, n_chunks=6,
+                                 steps_per_chunk=100, stream=stream)
     stream.close()
-    t.join(timeout=10)
+    consumer.join(timeout=10)
 
-    assert len(history) == 6
-    assert history[-1][2] < history[0][2], "neutrals should deplete"
-    print(f"\nstreamed {len(history)} steps in-situ; neutral depletion "
-          f"{history[0][2]:.0f} -> {history[-1][2]:.0f} (no files written)")
+    # post-hoc replay over the teed series must match the live run exactly
+    posthoc = reduce_posthoc(str(out), make_reducers(cfg))
+    assert_parity(live.results(), posthoc)
+
+    res = live.results()
+    n_e, n_D = res["n_e"]["counts"], res["n_D"]["counts"]
+    for step, ne, nd in zip(res["n_e"]["steps"], n_e, n_D):
+        print(f"  [live] step {step:5d}: n_e={ne:9.0f} n_D={nd:9.0f}")
+    assert n_D[-1] < n_D[0], "neutrals should deplete"
+    print(f"\nstreamed {len(n_e)} steps in-situ; neutral depletion "
+          f"{n_D[0]:.0f} -> {n_D[-1]:.0f}; live == post-hoc (exact)\n")
+
+    print("jbpls (metadata-only listing of the teed series):")
+    jbpls.main([str(out), "-l", "-L"])
 
 
 if __name__ == "__main__":

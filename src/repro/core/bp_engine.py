@@ -80,11 +80,42 @@ class ChunkMeta:
     agg: int
     file_offset: int
     nbytes: int
+    # per-block value statistics, ADIOS2-style: recorded in md.0 at write
+    # time so min/max queries never decompress a payload. None for empty
+    # or non-numeric blocks (and for series written before stats existed).
+    vmin: Optional[float] = None
+    vmax: Optional[float] = None
 
     def to_json(self):
-        return {"rank": self.rank, "offset": list(self.offset),
-                "extent": list(self.extent), "agg": self.agg,
-                "foff": self.file_offset, "nbytes": self.nbytes}
+        d = {"rank": self.rank, "offset": list(self.offset),
+             "extent": list(self.extent), "agg": self.agg,
+             "foff": self.file_offset, "nbytes": self.nbytes}
+        if self.vmin is not None:
+            d["min"] = self.vmin
+            d["max"] = self.vmax
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ChunkMeta":
+        return cls(d["rank"], tuple(d["offset"]), tuple(d["extent"]),
+                   d["agg"], d["foff"], d["nbytes"],
+                   d.get("min"), d.get("max"))
+
+
+def chunk_stats(arr: np.ndarray) -> tuple[Optional[float], Optional[float]]:
+    """(min, max) of a block, or (None, None) when undefined. NaNs are
+    ignored; stats are recorded only when both bounds are FINITE, so md.0
+    stays strict JSON (a bare NaN/Infinity token would break every
+    standards-compliant consumer of `jbpls --json`)."""
+    if arr.size == 0 or arr.dtype.kind not in "iufb":
+        return None, None
+    lo, hi = float(arr.min()), float(arr.max())
+    if arr.dtype.kind == "f" and not (np.isfinite(lo) and np.isfinite(hi)):
+        finite = arr[np.isfinite(arr)]        # rare path: NaN/inf present
+        if finite.size == 0:
+            return None, None
+        return float(finite.min()), float(finite.max())
+    return lo, hi
 
 
 @dataclasses.dataclass
@@ -193,7 +224,8 @@ class BpWriter:
                     payload = C.array_payload(arr, self.cfg.codec,
                                               block=self.cfg.compression_block)
                     payloads.append(payload)
-                    metas.append((name, rank, offset, arr.shape, len(payload)))
+                    metas.append((name, rank, offset, arr.shape, len(payload),
+                                  chunk_stats(arr)))
                 tcomp = time.perf_counter() - tc
                 base = self.subfiles.append(agg, b"".join(payloads))
             except Exception as e:   # noqa: BLE001
@@ -201,9 +233,9 @@ class BpWriter:
                 return
             with lock:
                 off = base
-                for name, rank, offset, shape, nb in metas:
+                for name, rank, offset, shape, nb, (vmin, vmax) in metas:
                     results[name].append(ChunkMeta(rank, offset, shape, agg,
-                                                   off, nb))
+                                                   off, nb, vmin, vmax))
                     off += nb
                 tcomp_total[0] += tcomp
 
@@ -266,10 +298,37 @@ class BpWriter:
                 f.write(json.dumps(self._profile_doc(), indent=1))
 
 
+def _box_intersection(coff, cext, sel_off, sel_ext):
+    """[lo, hi) overlap of two boxes, or None when they don't intersect."""
+    lo = tuple(max(a, b) for a, b in zip(coff, sel_off))
+    hi = tuple(min(a + e, b + f) for a, e, b, f in
+               zip(coff, cext, sel_off, sel_ext))
+    if any(l >= h for l, h in zip(lo, hi)):
+        return None
+    return lo, hi
+
+
 class BpReader:
+    """Reader with a metadata-only query plane (the paper's "rapid metadata
+    extraction" claim, §V):
+
+      * md.idx is scanned once (fixed-size crc-sealed records); md.0 blobs
+        are crc-validated up front but JSON-parsed LAZILY per step — opening
+        a 10k-step series to read one iteration parses one record,
+      * every query below (`var_names`, `iter_chunks`, `chunks_in_box`,
+        `var_minmax`, `var_nbytes`, `layout`, `variables`) is answered from
+        md.idx/md.0 alone — no `data.*` subfile is ever opened until
+        `read_var()` actually needs payload bytes,
+      * `read_var` prunes chunks with the same `_box_intersection`
+        predicate `chunks_in_box` uses, so an empty-intersection selection
+        performs zero payload I/O.
+    """
+
     def __init__(self, path):
         self.path = pathlib.Path(str(path))
-        self.steps: dict[int, dict] = {}
+        self._blobs: dict[int, bytes] = {}        # step -> validated md.0 blob
+        self._meta: dict[int, dict] = {}          # step -> parsed record cache
+        self.idx_records: dict[int, dict] = {}    # step -> md.idx fields
         self._load_index()
 
     def _load_index(self):
@@ -287,19 +346,160 @@ class BpReader:
             blob = md[off:off + ln]
             if len(blob) != ln or (zlib.crc32(blob) & 0xFFFFFFFF) != crc:
                 continue                       # torn/corrupt step -> ignore
-            self.steps[step] = json.loads(blob)
+            self._blobs[step] = blob
+            self.idx_records[step] = {"md_off": off, "md_len": ln,
+                                      "flags": flags, "t_ns": t_ns}
+
+    def _record(self, step: int) -> dict:
+        rec = self._meta.get(step)
+        if rec is None:
+            rec = self._meta[step] = json.loads(self._blobs[step])
+        return rec
+
+    @property
+    def steps(self) -> dict[int, dict]:
+        """Eager step->record view (compat with the pre-lazy reader):
+        touching it parses every remaining md.0 record."""
+        for s in self._blobs:
+            self._record(s)
+        return self._meta
 
     def valid_steps(self) -> list[int]:
-        return sorted(self.steps)
+        return sorted(self._blobs)
 
     def attributes(self, step: int) -> dict:
-        return self.steps[step].get("attrs", {})
+        return self._record(step).get("attrs", {})
 
     def var_names(self, step: int) -> list[str]:
-        return sorted(self.steps[step]["vars"])
+        return sorted(self._record(step)["vars"])
 
     def var_info(self, step: int, name: str) -> dict:
-        return self.steps[step]["vars"][name]
+        return self._record(step)["vars"][name]
+
+    # ------------------------------------------------- metadata query layer
+    def iter_chunks(self, step: int, name: str):
+        """Lazily yield one ChunkMeta per stored block of `name`."""
+        for ch in self.var_info(step, name)["chunks"]:
+            yield ChunkMeta.from_json(ch)
+
+    def chunks_in_box(self, step: int, name: str, offset: tuple,
+                      extent: tuple) -> list[ChunkMeta]:
+        """The read plan: chunk metas intersecting the selection box."""
+        sel_off, sel_ext = tuple(offset), tuple(extent)
+        return [c for c in self.iter_chunks(step, name)
+                if _box_intersection(c.offset, c.extent, sel_off, sel_ext)]
+
+    def _accum_var(self, step: int, name: str,
+                   layout: Optional[dict] = None) -> dict:
+        """Single chunk-table walk for one (step, name): byte totals, chunk
+        count, min/max fold, and (when `layout` is passed) aggregator
+        occupancy — THE one place the accumulation semantics live."""
+        info = self.var_info(step, name)
+        itemsize = np.dtype(info["dtype"]).itemsize
+        raw = stored = chunks = 0
+        lo: Optional[float] = None
+        hi: Optional[float] = None
+        stats_ok = True
+        for c in self.iter_chunks(step, name):
+            n = 1
+            for e in c.extent:
+                n *= int(e)
+            raw += n * itemsize
+            stored += c.nbytes
+            chunks += 1
+            if layout is not None:
+                d = layout.setdefault(c.agg, {"chunks": 0, "bytes": 0,
+                                              "end": 0})
+                d["chunks"] += 1
+                d["bytes"] += c.nbytes
+                d["end"] = max(d["end"], c.file_offset + c.nbytes)
+            if c.vmin is None:
+                stats_ok = False
+            else:
+                lo = c.vmin if lo is None else min(lo, c.vmin)
+                hi = c.vmax if hi is None else max(hi, c.vmax)
+        return {"info": info, "raw": raw, "stored": stored, "chunks": chunks,
+                "minmax": (lo, hi) if stats_ok and lo is not None else None}
+
+    def var_minmax(self, step: int, name: str) -> Optional[tuple]:
+        """Global (min, max) from the chunk statistics alone; None when any
+        block lacks finite stats (pre-stats series, empty/non-numeric/
+        all-NaN blocks)."""
+        return self._accum_var(step, name)["minmax"]
+
+    def var_nbytes(self, step: int, name: str) -> tuple[int, int]:
+        """(raw, stored) bytes — raw derived from extents x itemsize,
+        stored summed from the chunk table. ratio = raw / stored."""
+        a = self._accum_var(step, name)
+        return a["raw"], a["stored"]
+
+    def scan(self, steps=None, name_filter=None) -> dict:
+        """ONE pass over the chunk tables producing every aggregate the
+        listing tools need (re-walking md.0 per query would multiply the
+        cost of the thing that exists to be fast):
+
+          variables: name -> {dtype, shape, steps, chunks_per_step,
+                              shape_varies, raw, stored}
+                     (shape/chunks_per_step are the LATEST step's;
+                      shape_varies flags series that change shape)
+          per_step:  [{step, t_ns, n_vars, raw, stored}]
+          layout:    agg -> {chunks, bytes, end}   (subfile occupancy)
+          minmax:    name -> (lo, hi) over ALL scanned steps, or None when
+                     any block lacks finite stats
+
+        `name_filter` (a predicate on variable names) restricts EVERY
+        aggregate consistently — per-step totals, layout and minmax all
+        cover exactly the filtered variables.
+        """
+        variables: dict[str, dict] = {}
+        minmax: dict[str, Optional[tuple]] = {}
+        layout: dict[int, dict] = {}
+        per_step = []
+        for step in (self.valid_steps() if steps is None else steps):
+            step_raw = step_stored = 0
+            names = self.var_names(step)
+            if name_filter is not None:
+                names = [n for n in names if name_filter(n)]
+            for name in names:
+                a = self._accum_var(step, name, layout)
+                step_raw += a["raw"]
+                step_stored += a["stored"]
+                shape = tuple(a["info"]["shape"])
+                v = variables.setdefault(name, {
+                    "dtype": a["info"]["dtype"], "shape": shape,
+                    "steps": [], "chunks_per_step": a["chunks"],
+                    "shape_varies": False, "raw": 0, "stored": 0})
+                if v["steps"] and v["shape"] != shape:
+                    v["shape_varies"] = True
+                v["shape"] = shape
+                v["chunks_per_step"] = a["chunks"]
+                v["steps"].append(step)
+                v["raw"] += a["raw"]
+                v["stored"] += a["stored"]
+                if a["minmax"] is None:
+                    minmax[name] = None
+                elif name not in minmax:
+                    minmax[name] = a["minmax"]
+                elif minmax[name] is not None:
+                    lo, hi = a["minmax"]
+                    plo, phi = minmax[name]
+                    minmax[name] = (min(plo, lo), max(phi, hi))
+            per_step.append({"step": step,
+                             "t_ns": self.idx_records[step]["t_ns"],
+                             "n_vars": len(names), "raw": step_raw,
+                             "stored": step_stored})
+        return {"variables": variables, "per_step": per_step,
+                "layout": layout, "minmax": minmax}
+
+    def layout(self, steps=None) -> dict[int, dict]:
+        """Per-aggregator subfile occupancy {agg: {chunks, bytes, end}},
+        reconstructed from chunk tables — data.* files are never touched."""
+        return self.scan(steps)["layout"]
+
+    def variables(self, steps=None) -> dict[str, dict]:
+        """Union of variables across `steps` (default: all valid steps):
+        name -> {dtype, shape, steps, chunks_per_step, raw, stored}."""
+        return self.scan(steps)["variables"]
 
     def _read_payload(self, agg: int, foff: int, nbytes: int) -> bytes:
         plain = self.path / f"data.{agg}"
@@ -336,16 +536,16 @@ class BpReader:
         sel_off = tuple(offset) if offset is not None else (0,) * len(gshape)
         sel_ext = tuple(extent) if extent is not None else gshape
         out = np.zeros(sel_ext, dtype=dtype)
-        for ch in info["chunks"]:
-            coff, cext = tuple(ch["offset"]), tuple(ch["extent"])
-            lo = tuple(max(a, b) for a, b in zip(coff, sel_off))
-            hi = tuple(min(a + e, b + f) for a, e, b, f in
-                       zip(coff, cext, sel_off, sel_ext))
-            if any(l >= h for l, h in zip(lo, hi)):
+        for ch in self.iter_chunks(step, name):
+            box = _box_intersection(ch.offset, ch.extent, sel_off, sel_ext)
+            if box is None:
                 continue
-            payload = self._read_payload(ch["agg"], ch["foff"], ch["nbytes"])
-            arr = C.payload_to_array(payload, dtype, cext)
-            src = tuple(slice(l - o, h - o) for l, o, h in zip(lo, coff, hi))
-            dst = tuple(slice(l - o, h - o) for l, o, h in zip(lo, sel_off, hi))
+            lo, hi = box
+            payload = self._read_payload(ch.agg, ch.file_offset, ch.nbytes)
+            arr = C.payload_to_array(payload, dtype, ch.extent)
+            src = tuple(slice(l - o, h - o)
+                        for l, o, h in zip(lo, ch.offset, hi))
+            dst = tuple(slice(l - o, h - o)
+                        for l, o, h in zip(lo, sel_off, hi))
             out[dst] = arr[src]
         return out

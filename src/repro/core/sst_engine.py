@@ -19,9 +19,14 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
+
+# consumers blocked in steps() re-check the closed flag at this cadence, so
+# close() never has to force a sentinel through a full queue
+_POLL_S = 0.05
 
 
 class SstStream:
@@ -80,8 +85,15 @@ class SstStream:
             raise tee_exc
 
     def close(self):
+        """End the stream. ALWAYS completes, even with a full queue and no
+        consumer draining: the sentinel is best-effort (a blocking put here
+        deadlocked producers whose consumer had died) — consumers blocked in
+        steps() observe the closed flag by polling instead."""
         self._closed.set()
-        self._q.put(None)
+        try:
+            self._q.put_nowait(None)       # wake an already-waiting consumer
+        except queue.Full:
+            pass                           # steps() polls _closed; no deadlock
         if self._tee is not None:
             # AsyncBpWriter.close() drains, always completes its cleanup
             # (thread + file handles) and only then raises any write error
@@ -89,20 +101,51 @@ class SstStream:
 
     # ------------------------------------------------------------- consumer
     def steps(self, timeout: Optional[float] = None) -> Iterator[tuple]:
+        """Yield (step, vars) until the stream closes. `timeout` bounds the
+        idle wait between steps: when nothing arrives for `timeout` seconds
+        the iterator ENDS (it does not leak queue.Empty), so a consumer can
+        bail out of a stalled producer cleanly."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
-            item = self._q.get(timeout=timeout)
+            if self._closed.is_set() and self._q.empty():
+                return
+            wait = _POLL_S
+            if deadline is not None:
+                wait = min(wait, deadline - time.monotonic())
+                if wait <= 0:
+                    return                 # idle past timeout -> clean end
+            try:
+                item = self._q.get(timeout=max(wait, 1e-3))
+            except queue.Empty:
+                continue
             if item is None:
                 return
             yield item
+            if timeout is not None:        # idle timeout is per-step
+                deadline = time.monotonic() + timeout
 
 
 def attach_consumer(stream: SstStream, fn: Callable[[int, dict], Any],
                     *, daemon: bool = True) -> threading.Thread:
-    """Run `fn(step, vars)` on every streamed step in a background thread."""
+    """Run `fn(step, vars)` on every streamed step in a background thread.
+
+    A raising `fn` must not wedge the pipeline: the producer blocks in
+    `end_step` whenever the bounded queue is full, so a silently-dead
+    consumer thread would deadlock it. On the first exception the error is
+    recorded on the returned thread (`t.error`), later steps are DRAINED
+    and discarded until the stream closes, and the caller discovers the
+    failure after join() by checking `t.error`.
+    """
     def loop():
-        for step, data in stream.steps():
-            fn(step, data)
+        try:
+            for step, data in stream.steps():
+                fn(step, data)
+        except BaseException as e:         # noqa: BLE001 — surfaced via t.error
+            t.error = e
+            for _ in stream.steps():       # keep the producer unblocked
+                pass
 
     t = threading.Thread(target=loop, daemon=daemon)
+    t.error = None
     t.start()
     return t

@@ -1,0 +1,23 @@
+"""In-situ analysis & rapid metadata extraction (paper §V/§VI; follow-up
+study arXiv:2406.19058).
+
+Three planes:
+  * `repro.insitu.reducers` — streaming reductions (moments, histograms,
+    phase space, field energy, species counts) with a common
+    `update(step, vars)/result()` protocol,
+  * `repro.insitu.runner` — the same reducers run live over an `SstStream`
+    or post-hoc over a `BpReader`, with an exact-parity guarantee,
+  * `repro.tools.jbpls` — bpls-style metadata-only series inspection built
+    on the `BpReader` query layer.
+"""
+from repro.insitu.reducers import (FieldEnergy, Histogram, Moments,
+                                   PhaseSpace2D, Reducer, ReducerSet,
+                                   SpeciesCount)
+from repro.insitu.runner import (assert_parity, attach_reducers,
+                                 reduce_posthoc)
+
+__all__ = [
+    "Reducer", "ReducerSet", "Moments", "Histogram", "PhaseSpace2D",
+    "FieldEnergy", "SpeciesCount", "attach_reducers", "reduce_posthoc",
+    "assert_parity",
+]

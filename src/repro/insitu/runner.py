@@ -1,0 +1,65 @@
+"""Run reducers in-situ (over a live SstStream) or post-hoc (over a
+BpReader series), plus the parity check that ties the two together.
+
+The canonical wiring for "analyze live AND keep the data" is a teed stream:
+
+    writer = AsyncBpWriter(path, n_ranks, cfg)
+    stream = SstStream(queue_depth=2, tee=writer)
+    rset   = ReducerSet([...])
+    t      = attach_reducers(stream, rset)
+    ... producer put()/end_step() loop ...
+    stream.close(); t.join()
+    live = rset.results()
+
+and afterwards `reduce_posthoc(path, fresh_rset)` over the teed series must
+equal `live` exactly — `assert_parity(live, posthoc)` is the guarantee.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.bp_engine import BpReader
+from repro.core.sst_engine import SstStream, attach_consumer
+from repro.insitu.reducers import ReducerSet
+
+
+def attach_reducers(stream: SstStream, rset: ReducerSet,
+                    *, daemon: bool = True) -> threading.Thread:
+    """Consume the stream in a background thread, updating every reducer
+    with each step as it arrives (in-situ: no filesystem in the loop)."""
+    return attach_consumer(stream, rset.update, daemon=daemon)
+
+
+def reduce_posthoc(series: Union[str, BpReader], rset: ReducerSet,
+                   *, steps: Optional[list] = None) -> dict:
+    """Replay a series on disk through the reducers, in sorted step order
+    (the same order a live FIFO consumer observed). Only the variables the
+    reducers declare in `needs` are read from the subfiles."""
+    reader = series if isinstance(series, BpReader) else BpReader(series)
+    needed = rset.needed_vars
+    for step in (reader.valid_steps() if steps is None else steps):
+        names = reader.var_names(step)
+        if needed is not None:
+            names = [n for n in names if n in needed]
+        rset.update(step, {n: reader.read_var(step, n) for n in names})
+    return rset.results()
+
+
+def assert_parity(live: dict, posthoc: dict, path: str = "results"):
+    """Exact (bitwise for arrays) equality of two reducer result trees;
+    raises AssertionError naming the first diverging leaf."""
+    if isinstance(live, dict) and isinstance(posthoc, dict):
+        assert live.keys() == posthoc.keys(), \
+            f"{path}: keys {sorted(live)} != {sorted(posthoc)}"
+        for k in live:
+            assert_parity(live[k], posthoc[k], f"{path}/{k}")
+        return
+    if isinstance(live, np.ndarray) or isinstance(posthoc, np.ndarray):
+        a, b = np.asarray(live), np.asarray(posthoc)
+        assert a.dtype == b.dtype and a.shape == b.shape and \
+            np.array_equal(a, b, equal_nan=True), f"{path}: arrays differ"
+        return
+    assert live == posthoc, f"{path}: {live!r} != {posthoc!r}"

@@ -141,12 +141,15 @@ def diagnostics(state: PicState, cfg: PicConfig, *, v_bins: int = 64) -> dict:
 
 
 def write_diagnostics_openpmd(series, state: PicState, cfg: PicConfig,
-                              *, n_io_ranks: int = 8):
-    """Stream one diagnostic snapshot through openPMD (datfile analogue)."""
+                              *, n_io_ranks: int = 8, diag: Optional[dict] = None):
+    """Stream one diagnostic snapshot through openPMD (datfile analogue).
+    Pass a precomputed `diag` to share one snapshot between the openPMD
+    write and in-situ consumers (reducers / SST streams)."""
     step = int(state.step)
     it = series.iterations[step]
     it.time = step * cfg.dt
-    diag = diagnostics(state, cfg)
+    if diag is None:
+        diag = diagnostics(state, cfg)
     for name, arr in diag.items():
         if not isinstance(arr, np.ndarray):
             continue
@@ -175,22 +178,47 @@ def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
                   async_io=async_io, queue_depth=queue_depth)
 
 
-def run_with_diagnostics(state: PicState, cfg: PicConfig, series, *,
+def run_with_diagnostics(state: PicState, cfg: PicConfig, series=None, *,
                          n_chunks: int, steps_per_chunk: int,
-                         dump_every: int = 0, n_io_ranks: int = 8) -> PicState:
+                         dump_every: int = 0, n_io_ranks: int = 8,
+                         reducers=None, stream=None) -> PicState:
     """BIT1 main loop: jitted compute chunks interleaved with mvstep
     diagnostics (every chunk) and dmpstep particle dumps (every
     `dump_every` chunks). With an async series, `flush()` returns after the
     snapshot and the next chunk's compute overlaps the write pipeline; the
-    final `drain()` is the durability barrier before returning."""
+    final `drain()` is the durability barrier before returning.
+
+    In-situ hooks (repro.insitu): each chunk's diagnostic snapshot is
+    computed ONCE and fanned out to
+      * `series`   — openPMD persistence (optional: pass None to run a
+                     pure in-situ pipeline with no filesystem in the loop),
+      * `stream`   — an `SstStream`; consumers (e.g. `attach_reducers`)
+                     analyze live while the next chunk computes,
+      * `reducers` — a `ReducerSet` updated inline on the producer thread
+                     (run-time diagnostics without a consumer thread).
+    """
     for c in range(n_chunks):
         state = pic_run_chunk(state, cfg, steps_per_chunk)
-        write_diagnostics_openpmd(series, state, cfg, n_io_ranks=n_io_ranks)
-        if dump_every and (c + 1) % dump_every == 0:
-            write_particle_dump_openpmd(series, state, cfg,
-                                        n_io_ranks=n_io_ranks)
-        series.flush()
-    series.drain()
+        step = int(state.step)
+        diag = diagnostics(state, cfg)
+        arrays = {k: v for k, v in diag.items() if isinstance(v, np.ndarray)}
+        if series is not None:
+            write_diagnostics_openpmd(series, state, cfg,
+                                      n_io_ranks=n_io_ranks, diag=diag)
+            if dump_every and (c + 1) % dump_every == 0:
+                write_particle_dump_openpmd(series, state, cfg,
+                                            n_io_ranks=n_io_ranks)
+            series.flush()
+        if stream is not None:
+            stream.begin_step(step)
+            for name, arr in arrays.items():
+                stream.put(name, arr, global_shape=arr.shape,
+                           offset=(0,) * arr.ndim)
+            stream.end_step()
+        if reducers is not None:
+            reducers.update(step, arrays)
+    if series is not None:
+        series.drain()
     return state
 
 

@@ -1,0 +1,1 @@
+"""Command-line tools for JBP/openPMD series (`python -m repro.tools.<x>`)."""

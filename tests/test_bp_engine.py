@@ -61,6 +61,48 @@ def test_box_selection(tmpdir_path):
     np.testing.assert_array_equal(sel, truth[0][21:61, 1:3])
 
 
+def test_read_var_empty_intersection(tmpdir_path):
+    """A selection that intersects no chunk returns zeros of the selection
+    shape and performs ZERO payload I/O (the chunks_in_box plan is empty)."""
+    from repro.core.darshan import MONITOR
+    _write_series(tmpdir_path / "s.bp4", n_ranks=8)   # global (128, 4)
+    MONITOR.reset()
+    r = BpReader(tmpdir_path / "s.bp4")
+    sel = r.read_var(0, "var/x", offset=(128, 0), extent=(10, 4))
+    np.testing.assert_array_equal(sel, np.zeros((10, 4), np.float32))
+    assert r.chunks_in_box(0, "var/x", (128, 0), (10, 4)) == []
+    files = MONITOR.report()["files"]
+    assert sum(c.get("POSIX_READS", 0) for p, c in files.items()
+               if "data." in p) == 0
+
+
+def test_read_var_box_spanning_subfiles(tmpdir_path):
+    """A box crossing aggregator boundaries assembles from multiple
+    subfiles (8 ranks over 4 aggregators -> 2 ranks per subfile)."""
+    from repro.core.darshan import MONITOR
+    truth = _write_series(tmpdir_path / "s.bp4", n_ranks=8, aggregators=4)
+    MONITOR.reset()
+    r = BpReader(tmpdir_path / "s.bp4")
+    # rows 24..104 span rank chunks 1..6 -> aggregators 0..3
+    sel = r.read_var(1, "var/x", offset=(24, 0), extent=(80, 4))
+    np.testing.assert_array_equal(sel, truth[1][24:104])
+    touched = {p for p, c in MONITOR.report()["files"].items()
+               if "data." in p and c.get("POSIX_READS", 0) > 0}
+    assert len(touched) == 4
+
+
+@pytest.mark.parametrize("codec", ["blosc", "bzip2", "zlib"])
+def test_read_var_box_of_compressed_chunks(tmpdir_path, codec):
+    """Box selections decompress only intersecting chunks, losslessly."""
+    truth = _write_series(tmpdir_path / "s.bp4", codec=codec, n_ranks=8)
+    r = BpReader(tmpdir_path / "s.bp4")
+    sel = r.read_var(0, "var/x", offset=(19, 2), extent=(42, 2))
+    np.testing.assert_array_equal(sel, truth[0][19:61, 2:4])
+    # chunk stats survive the codec: metadata min/max == data min/max
+    lo, hi = r.var_minmax(0, "var/x")
+    assert lo == float(truth[0].min()) and hi == float(truth[0].max())
+
+
 def test_torn_step_is_dropped(tmpdir_path):
     """Crash consistency: corrupt md.0 bytes -> that step invalid, rest ok."""
     _write_series(tmpdir_path / "s.bp4", steps=3)

@@ -1,0 +1,441 @@
+"""In-situ subsystem: reducer correctness, stream/post-hoc parity, the
+BpReader metadata query layer, jbpls O(metadata) listing, and the
+SstStream close/timeout fixes."""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncBpWriter
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import MONITOR
+from repro.core.sst_engine import SstStream, attach_consumer
+from repro.insitu import (FieldEnergy, Histogram, Moments, PhaseSpace2D,
+                          ReducerSet, SpeciesCount, assert_parity,
+                          attach_reducers, reduce_posthoc)
+from repro.tools import jbpls
+
+
+def _subfile_reads() -> float:
+    """Total read ops+bytes recorded against any data.* subfile."""
+    files = MONITOR.report()["files"]
+    return sum(c.get("POSIX_READS", 0) + c.get("POSIX_BYTES_READ", 0)
+               for p, c in files.items() if "data." in p)
+
+
+def _produce_stream(stream, *, n_steps, n_ranks=4, n=64, seed=0):
+    """Deterministic multi-rank producer; returns the per-step truth."""
+    rng = np.random.default_rng(seed)
+    truth = {}
+    per = n // n_ranks
+    for s in range(n_steps):
+        g = rng.normal(size=(n,)).astype(np.float32)
+        w = rng.uniform(size=(n,)).astype(np.float32)
+        truth[s] = {"density/e": g, "weight/e": w}
+        stream.begin_step(s)
+        for r in range(n_ranks):
+            sl = slice(r * per, (r + 1) * per)
+            stream.put("density/e", g[sl], global_shape=(n,),
+                       offset=(r * per,), rank=r)
+            stream.put("weight/e", w[sl], global_shape=(n,),
+                       offset=(r * per,), rank=r)
+        stream.end_step()
+    return truth
+
+
+def _reducer_suite():
+    return ReducerSet([
+        Moments("density/e"),
+        Histogram("density/e", bins=32, range=(-4.0, 4.0)),
+        Histogram("density/e", bins=16, range=(-4.0, 4.0),
+                  weight_var="weight/e", name="weighted_hist"),
+        PhaseSpace2D("density/e", "weight/e", bins=(8, 8),
+                     range=((-4.0, 4.0), (0.0, 1.0))),
+        FieldEnergy("density/e", cell_volume=0.5),
+        SpeciesCount("weight/e", scale=2.0),
+    ])
+
+
+# ------------------------------------------------------------- reducer math
+def test_moments_matches_numpy():
+    r = Moments("x")
+    chunks = [np.arange(10, dtype=np.float64), np.linspace(-3, 5, 7)]
+    for s, a in enumerate(chunks):
+        r.update(s, {"x": a})
+    allv = np.concatenate(chunks)
+    res = r.result()
+    assert res["n"] == allv.size and res["steps"] == 2
+    np.testing.assert_allclose(res["mean"], allv.mean())
+    np.testing.assert_allclose(res["var"], allv.var(), rtol=1e-12)
+    assert res["min"] == allv.min() and res["max"] == allv.max()
+
+
+def test_histogram_matches_numpy():
+    r = Histogram("x", bins=20, range=(-2.0, 2.0))
+    vals = [np.random.default_rng(i).normal(size=100) for i in range(3)]
+    for s, a in enumerate(vals):
+        r.update(s, {"x": a})
+    expect, edges = np.histogram(np.concatenate(vals), bins=20,
+                                 range=(-2.0, 2.0))
+    res = r.result()
+    np.testing.assert_array_equal(res["counts"], expect.astype(np.float64))
+    np.testing.assert_array_equal(res["edges"], edges)
+
+
+def test_reducers_skip_missing_vars():
+    rset = _reducer_suite()
+    rset.update(0, {"unrelated": np.ones(4)})
+    res = rset.results()
+    assert res["moments(density/e)"]["n"] == 0
+    assert res["count(weight/e)"]["steps"].size == 0
+
+
+def test_reducer_set_needed_vars():
+    assert _reducer_suite().needed_vars == {"density/e", "weight/e"}
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("codec", ["none", "blosc"])
+def test_parity_stream_vs_posthoc(tmpdir_path, codec):
+    """The acceptance guarantee: a live reduction over SstStream equals the
+    post-hoc replay over BpReader on the teed series, bit for bit."""
+    path = tmpdir_path / "teed.bp4"
+    tee = AsyncBpWriter(path, 4, EngineConfig(aggregators=2, codec=codec))
+    stream = SstStream(queue_depth=2, tee=tee)
+    live = _reducer_suite()
+    t = attach_reducers(stream, live)
+    _produce_stream(stream, n_steps=25)
+    stream.close()
+    t.join(timeout=30)
+    assert not t.is_alive()
+
+    posthoc = reduce_posthoc(str(path), _reducer_suite())
+    assert_parity(live.results(), posthoc)
+
+
+def test_parity_detects_divergence():
+    a = ReducerSet([Moments("x")])
+    b = ReducerSet([Moments("x")])
+    a.update(0, {"x": np.ones(4)})
+    b.update(0, {"x": np.zeros(4)})
+    with pytest.raises(AssertionError, match="moments"):
+        assert_parity(a.results(), b.results())
+
+
+def test_reduce_posthoc_reads_only_needed_vars(tmpdir_path):
+    """`needs` declarations prune the replay's payload reads."""
+    path = tmpdir_path / "s.bp4"
+    w = BpWriter(path, 2, EngineConfig(aggregators=2))
+    for s in range(3):
+        w.begin_step(s)
+        for name in ("wanted", "ignored"):
+            for r in range(2):
+                w.put(name, np.full(8, s, np.float32), global_shape=(16,),
+                      offset=(r * 8,), rank=r)
+        w.end_step()
+    w.close()
+    seen = []
+    reader = BpReader(path)
+    orig = reader.read_var
+    reader.read_var = lambda step, name, *a, **k: (
+        seen.append(name), orig(step, name, *a, **k))[1]
+    reduce_posthoc(reader, ReducerSet([Moments("wanted")]))
+    assert set(seen) == {"wanted"}
+
+
+# ------------------------------------------------- metadata query layer
+def _write_series(path, *, n_ranks=8, aggregators=3, codec="blosc", steps=2,
+                  n=128):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3)
+    w = BpWriter(path, n_ranks, cfg)
+    rng = np.random.default_rng(7)
+    truth = {}
+    per = n // n_ranks
+    for s in range(steps):
+        w.begin_step(s)
+        g = np.cumsum(rng.normal(size=(n,))).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * per:(r + 1) * per], global_shape=(n,),
+                  offset=(r * per,), rank=r)
+        w.end_step()
+    w.close()
+    return truth
+
+
+def test_var_minmax_from_metadata(tmpdir_path):
+    truth = _write_series(tmpdir_path / "s.bp4")
+    MONITOR.reset()
+    r = BpReader(tmpdir_path / "s.bp4")
+    for s, g in truth.items():
+        lo, hi = r.var_minmax(s, "var/x")
+        assert lo == float(g.min()) and hi == float(g.max())
+    assert _subfile_reads() == 0
+
+
+def test_var_nbytes_and_ratio(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", codec="none")
+    r = BpReader(tmpdir_path / "s.bp4")
+    raw, stored = r.var_nbytes(0, "var/x")
+    assert raw == 128 * 4
+    # codec none: stored = raw + per-block headers
+    assert stored >= raw
+
+
+def test_chunks_in_box_and_iter(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", n_ranks=8, n=128)
+    r = BpReader(tmpdir_path / "s.bp4")
+    chunks = list(r.iter_chunks(0, "var/x"))
+    assert len(chunks) == 8
+    assert all(c.vmin is not None for c in chunks)
+    # box [20, 52) covers rank chunks 1..3 (16 elements each)
+    plan = r.chunks_in_box(0, "var/x", (20,), (32,))
+    assert sorted(c.offset[0] for c in plan) == [16, 32, 48]
+
+
+def test_layout_matches_aggregators(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", n_ranks=8, aggregators=3)
+    r = BpReader(tmpdir_path / "s.bp4")
+    lay = r.layout()
+    assert sorted(lay) == [0, 1, 2]
+    # occupancy reconstructed from chunk tables matches the files on disk
+    for agg, d in lay.items():
+        assert d["end"] == (tmpdir_path / "s.bp4" / f"data.{agg}").stat().st_size
+
+
+def test_lazy_metadata_parsing(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", steps=5)
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r._meta == {}                      # nothing parsed at open
+    r.var_names(3)
+    assert sorted(r._meta) == [3]             # only the touched step
+    assert sorted(r.steps) == [0, 1, 2, 3, 4]  # compat view parses all
+
+
+def test_variables_union(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    r = BpReader(tmpdir_path / "s.bp4")
+    v = r.variables()["var/x"]
+    assert v["steps"] == [0, 1, 2]
+    assert v["shape"] == (128,) and v["chunks_per_step"] == 8
+
+
+# ----------------------------------------------------------------- jbpls
+def test_jbpls_metadata_only_100_steps(tmpdir_path, capsys):
+    """Acceptance: list a >=100-step series with ZERO data.* reads."""
+    n_steps = 120
+    _write_series(tmpdir_path / "big.bp4", n_ranks=4, steps=n_steps, n=64)
+    MONITOR.reset()
+    rc = jbpls.main([str(tmpdir_path / "big.bp4"), "-l", "-s", "-L", "-A"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert f"steps: {n_steps} (0..{n_steps - 1})" in out
+    assert "var/x" in out and "min/max" in out
+    assert _subfile_reads() == 0, \
+        "jbpls touched a data.* subfile — the O(metadata) guarantee broke"
+
+
+def test_jbpls_dump_reads_payload(tmpdir_path, capsys):
+    truth = _write_series(tmpdir_path / "s.bp4")
+    MONITOR.reset()
+    rc = jbpls.main([str(tmpdir_path / "s.bp4"), "--dump", "var/x",
+                     "--step", "1"])
+    assert rc == 0
+    assert _subfile_reads() > 0               # --dump is the documented exception
+    assert f"{truth[1][0]:.6g}"[:6] in capsys.readouterr().out
+
+
+def test_jbpls_json_and_filters(tmpdir_path, capsys):
+    import json
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    rc = jbpls.main([str(tmpdir_path / "s.bp4"), "--json", "--var", "var"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["variables"]["var/x"]["steps"] == [0, 1, 2]
+    assert doc["minmax"]["var/x"] is not None
+
+
+def test_jbpls_not_a_series(tmpdir_path, capsys):
+    assert jbpls.main([str(tmpdir_path)]) == 2
+    assert "no md.idx" in capsys.readouterr().err
+
+
+def test_jbpls_minmax_spans_all_steps(tmpdir_path):
+    """The listed range is the whole series', not the last step's."""
+    path = tmpdir_path / "s.bp4"
+    w = BpWriter(path, 1, EngineConfig())
+    for s, (lo, hi) in enumerate([(-9.0, 9.0), (-1.0, 1.0)]):
+        w.begin_step(s)
+        w.put("x", np.linspace(lo, hi, 16, dtype=np.float32),
+              global_shape=(16,), offset=(0,), rank=0)
+        w.end_step()
+    w.close()
+    sv = jbpls.survey(BpReader(path))
+    assert sv["minmax"]["x"] == (-9.0, 9.0)   # extrema live in step 0
+
+
+def test_chunk_stats_nan_safe_and_json_strict(tmpdir_path, capsys):
+    """NaN/inf blocks never leak NaN tokens into md.0 or jbpls --json."""
+    import json
+    path = tmpdir_path / "s.bp4"
+    w = BpWriter(path, 1, EngineConfig())
+    w.begin_step(0)
+    w.put("mixed", np.array([np.nan, 1.0, np.inf, -2.0], np.float32),
+          global_shape=(4,), offset=(0,), rank=0)
+    w.put("allnan", np.full(4, np.nan, np.float32),
+          global_shape=(4,), offset=(0,), rank=0)
+    w.end_step()
+    w.close()
+    r = BpReader(path)
+    assert r.var_minmax(0, "mixed") == (-2.0, 1.0)   # finite values only
+    assert r.var_minmax(0, "allnan") is None
+    assert jbpls.main([str(path), "--json"]) == 0
+    strict = json.loads(capsys.readouterr().out,
+                        parse_constant=lambda c: (_ for _ in ()).throw(
+                            ValueError(f"non-strict token {c}")))
+    assert strict["minmax"]["allnan"] is None
+
+
+def test_jbpls_bad_step_and_dump_exit_cleanly(tmpdir_path, capsys):
+    _write_series(tmpdir_path / "s.bp4", steps=2)
+    assert jbpls.main([str(tmpdir_path / "s.bp4"), "--step", "99"]) == 1
+    assert "no valid step 99" in capsys.readouterr().err
+    assert jbpls.main([str(tmpdir_path / "s.bp4"), "--dump", "nope"]) == 1
+    assert "no variable 'nope'" in capsys.readouterr().err
+
+
+# -------------------------------------------------- SstStream lifecycle
+def test_sst_close_with_full_queue_and_no_consumer():
+    """The deadlock fix: close() must return even when nobody drains."""
+    stream = SstStream(queue_depth=1)
+    stream.begin_step(0)
+    stream.put("x", np.ones(4))
+    stream.end_step()                          # queue now full
+    done = threading.Event()
+
+    def closer():
+        stream.close()
+        done.set()
+
+    t = threading.Thread(target=closer, daemon=True)
+    t.start()
+    assert done.wait(timeout=5), "close() deadlocked on a full queue"
+    # a late consumer still receives the queued step, then a clean end
+    got = list(stream.steps(timeout=2))
+    assert len(got) == 1 and got[0][0] == 0
+
+
+def test_sst_steps_timeout_ends_iterator():
+    """steps(timeout=...) ends cleanly instead of leaking queue.Empty."""
+    stream = SstStream(queue_depth=2)
+    t0 = time.monotonic()
+    assert list(stream.steps(timeout=0.3)) == []
+    assert 0.2 < time.monotonic() - t0 < 2.0
+
+
+def test_sst_steps_timeout_is_per_step():
+    stream = SstStream(queue_depth=4)
+    for s in range(3):
+        stream.begin_step(s)
+        stream.put("x", np.full(2, s))
+        stream.end_step()
+    stream.close()
+    got = [s for s, _ in stream.steps(timeout=0.5)]
+    assert got == [0, 1, 2]
+
+
+def test_sst_blocked_consumer_wakes_on_close():
+    """A consumer already blocked in steps() (no timeout) ends after close."""
+    stream = SstStream(queue_depth=2)
+    seen = []
+    t = attach_consumer(stream, lambda s, v: seen.append(s))
+    time.sleep(0.15)                          # consumer is parked in get()
+    stream.begin_step(7)
+    stream.put("x", np.ones(3))
+    stream.end_step()
+    stream.close()
+    t.join(timeout=5)
+    assert not t.is_alive() and seen == [7]
+
+
+def test_sst_raising_consumer_does_not_wedge_producer():
+    """A consumer that raises records t.error, keeps draining, and the
+    producer runs to completion instead of deadlocking in end_step."""
+    stream = SstStream(queue_depth=1)
+
+    def bad(step, vars):
+        raise ValueError("boom")
+
+    t = attach_consumer(stream, bad)
+    for s in range(5):                     # >> queue_depth: needs draining
+        stream.begin_step(s)
+        stream.put("x", np.full(4, s))
+        stream.end_step()
+    stream.close()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert isinstance(t.error, ValueError)
+
+
+def test_scan_tracks_varying_shapes(tmpdir_path):
+    path = tmpdir_path / "s.bp4"
+    w = BpWriter(path, 1, EngineConfig())
+    for s, n in enumerate([8, 16]):        # dmp-style growing variable
+        w.begin_step(s)
+        w.put("grow", np.zeros(n, np.float32), global_shape=(n,),
+              offset=(0,), rank=0)
+        w.end_step()
+    w.close()
+    v = BpReader(path).scan()["variables"]["grow"]
+    assert v["shape"] == (16,) and v["shape_varies"]
+    assert v["raw"] == (8 + 16) * 4
+
+
+def test_jbpls_var_filter_is_consistent(tmpdir_path):
+    """--var restricts per-step totals and layout too, not just the
+    variables table."""
+    path = tmpdir_path / "s.bp4"
+    w = BpWriter(path, 1, EngineConfig())
+    w.begin_step(0)
+    w.put("density/e", np.zeros(8, np.float32), global_shape=(8,),
+          offset=(0,), rank=0)
+    w.put("vdist/e", np.zeros(32, np.float32), global_shape=(32,),
+          offset=(0,), rank=0)
+    w.end_step()
+    w.close()
+    sv = jbpls.survey(BpReader(path), var_filter="density")
+    assert list(sv["variables"]) == ["density/e"]
+    assert sv["per_step"][0]["n_vars"] == 1
+    var_stored = sv["variables"]["density/e"]["stored"]
+    assert sv["per_step"][0]["stored"] == var_stored
+    assert sum(d["bytes"] for d in sv["layout"].values()) == var_stored
+
+
+# --------------------------------------------------------- PIC wiring
+@pytest.mark.slow
+def test_pic_run_with_live_reducers(tmpdir_path):
+    import jax
+    from repro.pic.simulation import (PicConfig, init_sim,
+                                      open_diagnostic_series,
+                                      run_with_diagnostics)
+    cfg = PicConfig(n_cells=64, capacity=1 << 9, n_electrons=256,
+                    n_ions=256, n_neutrals=256)
+    rset = ReducerSet([SpeciesCount("density/e", scale=cfg.dx, name="n_e"),
+                       Moments("vdist/e")])
+    stream = SstStream(queue_depth=2)
+    streamed = []
+    t = attach_consumer(stream, lambda s, v: streamed.append(s))
+    series = open_diagnostic_series(tmpdir_path / "diag.bp4", n_io_ranks=4)
+    state = init_sim(cfg, jax.random.PRNGKey(0))
+    run_with_diagnostics(state, cfg, series, n_chunks=3, steps_per_chunk=2,
+                         n_io_ranks=4, reducers=rset, stream=stream)
+    series.close()
+    stream.close()
+    t.join(timeout=10)
+    res = rset.results()
+    assert list(res["n_e"]["steps"]) == [2, 4, 6] == streamed
+    assert res["moments(vdist/e)"]["steps"] == 3
+    # the openPMD series persisted the same iterations
+    assert BpReader(tmpdir_path / "diag.bp4").valid_steps() == [2, 4, 6]
