@@ -66,13 +66,16 @@ def _leaf_chunks(arr: np.ndarray, n_ranks: int):
 def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
                     engine_config: EngineConfig = EngineConfig(),
                     extra_attrs: Optional[dict] = None,
-                    async_io: bool = False) -> pathlib.Path:
+                    async_io: bool = False,
+                    parallel_io: int = 0) -> pathlib.Path:
     """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename).
 
     With `async_io` the write goes through the AsyncBpWriter pipeline;
     fsync_policy is still forced to "step", which the async engine honours
     with a BLOCKING seal — so by the time the .tmp is renamed the step's
-    md.idx record is durable either way."""
+    md.idx record is durable either way. `parallel_io=W` instead writes
+    through W real writer processes (two-phase commit; the md.idx seal and
+    every subfile/shard fsync precede the rename)."""
     directory = pathlib.Path(str(directory))
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}.bp4"
@@ -83,7 +86,10 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
     flat = flatten_state(state)
     import dataclasses as _dc
     cfg = _dc.replace(engine_config, fsync_policy="step")
-    if async_io:
+    if parallel_io:
+        from repro.core.parallel_engine import ParallelBpWriter
+        w = ParallelBpWriter(tmp, n_io_ranks, cfg, n_writers=parallel_io)
+    elif async_io:
         from repro.core.async_engine import AsyncBpWriter
         w = AsyncBpWriter(tmp, n_io_ranks, cfg)
     else:
@@ -153,9 +159,12 @@ def restore_checkpoint(directory, like, step: Optional[int] = None):
     reader = BpReader(checkpoint_path(directory, step))
     flat = flatten_state(like)
     out = {}
-    for name, leaf in flat.items():
-        arr = reader.read_var(step, f"state/{name}")
-        out[name] = _from_storage(arr, leaf.dtype).reshape(leaf.shape)
+    try:
+        for name, leaf in flat.items():
+            arr = reader.read_var(step, f"state/{name}")
+            out[name] = _from_storage(arr, leaf.dtype).reshape(leaf.shape)
+    finally:
+        reader.close()
     return unflatten_like(like, out), step
 
 
@@ -171,23 +180,26 @@ def restore_sharded(directory, like, shardings, step: Optional[int] = None):
     flat_like = flatten_state(like)
     flat_sh = flatten_state(shardings)
     out = {}
-    for name, leaf in flat_like.items():
-        sh = flat_sh[name]
-        var = f"state/{name}"
+    try:
+        for name, leaf in flat_like.items():
+            sh = flat_sh[name]
+            var = f"state/{name}"
 
-        def fetch(idx, _var=var, _leaf=leaf):
-            off = tuple((sl.start or 0) for sl in idx)
-            ext = tuple((sl.stop if sl.stop is not None else s) -
-                        (sl.start or 0) for sl, s in zip(idx, _leaf.shape))
-            a = reader.read_var(step, _var, off, ext)
-            return _from_storage(a, _leaf.dtype)
+            def fetch(idx, _var=var, _leaf=leaf):
+                off = tuple((sl.start or 0) for sl in idx)
+                ext = tuple((sl.stop if sl.stop is not None else s) -
+                            (sl.start or 0) for sl, s in zip(idx, _leaf.shape))
+                a = reader.read_var(step, _var, off, ext)
+                return _from_storage(a, _leaf.dtype)
 
-        if leaf.ndim == 0:
-            arr = _from_storage(reader.read_var(step, var),
-                                leaf.dtype).reshape(())
-            out[name] = jax.device_put(arr, sh)
-        else:
-            out[name] = jax.make_array_from_callback(leaf.shape, sh, fetch)
+            if leaf.ndim == 0:
+                arr = _from_storage(reader.read_var(step, var),
+                                    leaf.dtype).reshape(())
+                out[name] = jax.device_put(arr, sh)
+            else:
+                out[name] = jax.make_array_from_callback(leaf.shape, sh, fetch)
+    finally:
+        reader.close()
     return unflatten_like(like, out), step
 
 

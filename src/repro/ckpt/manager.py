@@ -33,12 +33,17 @@ class CheckpointManager:
     def __init__(self, directory, *, every: int = 100, keep_n: int = 3,
                  n_io_ranks: int = 8,
                  engine_config: EngineConfig = EngineConfig(),
-                 async_write: bool = True, engine_async: bool = False):
+                 async_write: bool = True, engine_async: bool = False,
+                 parallel_io: int = 0):
         # async_write is what hides checkpoint I/O behind the next train
         # step (the writer thread). engine_async additionally routes the
         # write through AsyncBpWriter — correctness-neutral (checkpoints
         # force fsync_policy="step", a blocking seal), useful when shared
-        # pipeline profiling is wanted; off by default.
+        # pipeline profiling is wanted; off by default. parallel_io=W
+        # routes the write through W real writer processes instead
+        # (repro.core.parallel_engine) — compression and subfile appends
+        # leave the training process entirely; takes precedence over
+        # engine_async.
         self.dir = pathlib.Path(str(directory))
         self.dir.mkdir(parents=True, exist_ok=True)
         self.every = every
@@ -47,6 +52,7 @@ class CheckpointManager:
         self.engine_config = engine_config
         self.async_write = async_write
         self.engine_async = engine_async
+        self.parallel_io = int(parallel_io)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self.saved_steps: list[int] = []
@@ -88,7 +94,9 @@ class CheckpointManager:
                 CK.save_checkpoint(self.dir, host_state, step,
                                    n_io_ranks=self.n_io_ranks,
                                    engine_config=self.engine_config,
-                                   async_io=self.engine_async)
+                                   async_io=(self.engine_async
+                                             and not self.parallel_io),
+                                   parallel_io=self.parallel_io)
                 self.stats["write_s"] += time.perf_counter() - t0
                 self.saved_steps.append(step)
                 # durability barrier passed (sealed md.idx + rename above):

@@ -4,10 +4,11 @@ Darshan-style monitoring — adapted TPU/JAX-native (see DESIGN.md §2)."""
 from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
 from repro.core.darshan import MONITOR, DarshanMonitor, open_file
 from repro.core.openpmd import Iteration, Mesh, ParticleSpecies, Record, Series
+from repro.core.parallel_engine import ParallelBpWriter
 from repro.core.striping import OstPool, StripeConfig, StripedFile
 
 __all__ = [
     "BpReader", "BpWriter", "EngineConfig", "MONITOR", "DarshanMonitor",
     "open_file", "Iteration", "Mesh", "ParticleSpecies", "Record", "Series",
-    "OstPool", "StripeConfig", "StripedFile",
+    "OstPool", "StripeConfig", "StripedFile", "ParallelBpWriter",
 ]

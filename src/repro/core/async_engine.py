@@ -155,8 +155,19 @@ class AsyncBpWriter(BpWriter):
                 self._q.task_done()
 
     def _check_error(self):
-        if self._writer_error is not None:
-            raise self._writer_error
+        """Surface a background write failure to the producer. Each call
+        raises a FRESH exception chained to the original via __cause__ —
+        re-raising the stored object itself would accrete a new traceback
+        per call site (end_step, drain, close all check) and misreport
+        where the failure happened."""
+        err = self._writer_error
+        if err is None:
+            return
+        try:
+            fresh = type(err)(*err.args)
+        except Exception:                      # noqa: BLE001 — odd signature
+            fresh = RuntimeError(f"async writer failed: {err!r}")
+        raise fresh from err
 
     # -------------------------------------------------------------- profiling
     def _profile_doc(self) -> dict:

@@ -51,7 +51,7 @@ from repro.core import compression as C
 from repro.core.aggregation import (AggregatorConfig, SubfileSet, WriterPool,
                                     aggregator_of)
 from repro.core.darshan import open_file
-from repro.core.striping import OstPool, StripeConfig
+from repro.core.striping import OstPool, StripeConfig, StripedFile
 
 IDX_RECORD = struct.Struct("<QQQIIQQQ")   # step, md_off, md_len, crc, flags, t_ns, reserved x2
 IDX_SIZE = IDX_RECORD.size
@@ -118,6 +118,56 @@ def chunk_stats(arr: np.ndarray) -> tuple[Optional[float], Optional[float]]:
     return lo, hi
 
 
+def validate_put_rank(rank: int, n_ranks: int):
+    """The put() boundary check — an out-of-range rank must be a clear
+    ValueError here, not an opaque IndexError deep in SubfileSet."""
+    if not 0 <= rank < n_ranks:
+        raise ValueError(
+            f"put(rank={rank}) out of range for a writer opened with "
+            f"n_ranks={n_ranks} (valid ranks are 0..{n_ranks - 1})")
+
+
+def build_md_record(step: int, attrs: dict, pending: dict,
+                    chunks_json: dict[str, list]) -> dict:
+    """The global per-step metadata record written to md.0 — THE one
+    definition of the on-disk chunk-table layout and ordering. Shared by
+    the sync, async and multi-process writers: byte parity across engines
+    (and therefore reader compatibility) depends on every writer building
+    its record here."""
+    return {
+        "step": step,
+        "attrs": attrs,
+        "vars": {
+            name: {"dtype": var["dtype"], "shape": list(var["shape"]),
+                   "chunks": sorted(chunks_json[name],
+                                    key=lambda c: (c["rank"],
+                                                   tuple(c["offset"])))}
+            for name, var in pending.items()},
+    }
+
+
+def seal_md_record(md, idx, md_off: int, step: int, blob: bytes,
+                   *, fsync_step: bool) -> int:
+    """Append one md.0 blob and its crc-sealed md.idx record — the commit
+    point of every engine. With `fsync_step` the seal is durable before
+    returning (md.0 fsynced BEFORE the idx record exists, so a validated
+    idx record always points at durable metadata); otherwise bytes reach
+    the OS and the fsync is deferred to close. Returns the new md offset."""
+    md.write(blob)
+    crc = zlib.crc32(blob) & 0xFFFFFFFF
+    rec = IDX_RECORD.pack(step, md_off, len(blob), crc, 1,
+                          time.time_ns(), 0, 0)
+    if fsync_step:
+        md.fsync()
+        idx.write(rec)
+        idx.fsync()
+    else:
+        idx.write(rec)
+        md.flush()       # bytes reach the OS; fsync deferred to close
+        idx.flush()
+    return md_off + len(blob)
+
+
 @dataclasses.dataclass
 class StepSnapshot:
     """One step's puts, captured at end_step time — the unit of work handed
@@ -168,6 +218,7 @@ class BpWriter:
             offset: tuple, rank: int):
         """Register one rank's chunk of variable `name` for this step."""
         assert self._step is not None, "put() outside begin/end_step"
+        validate_put_rank(rank, self.n_ranks)
         a = np.ascontiguousarray(array)
         var = self._pending.setdefault(name, {
             "dtype": a.dtype.str, "shape": tuple(int(x) for x in global_shape),
@@ -246,30 +297,14 @@ class BpWriter:
             raise errors[0]
 
         # ---- metadata record (md.0), then sealed index record (md.idx) ------
-        md_rec = {
-            "step": step,
-            "attrs": snap.attrs,
-            "vars": {
-                name: {"dtype": var["dtype"], "shape": list(var["shape"]),
-                       "chunks": [c.to_json() for c in
-                                  sorted(results[name],
-                                         key=lambda c: (c.rank, c.offset))]}
-                for name, var in snap.pending.items()},
-        }
+        md_rec = build_md_record(
+            step, snap.attrs, snap.pending,
+            {name: [c.to_json() for c in results[name]]
+             for name in snap.pending})
         blob = json.dumps(md_rec).encode()
-        self._md.write(blob)
-        crc = zlib.crc32(blob) & 0xFFFFFFFF
-        rec = IDX_RECORD.pack(step, self._md_off, len(blob), crc, 1,
-                              time.time_ns(), 0, 0)
-        if self.cfg.fsync_policy == "step":
-            self._md.fsync()
-            self._idx.write(rec)
-            self._idx.fsync()
-        else:
-            self._idx.write(rec)
-            self._md.flush()       # bytes reach the OS; fsync deferred to close
-            self._idx.flush()
-        self._md_off += len(blob)
+        self._md_off = seal_md_record(
+            self._md, self._idx, self._md_off, step, blob,
+            fsync_step=self.cfg.fsync_policy == "step")
 
         dt = time.perf_counter() - t0
         prof = {"step": step, "write_s": dt, "compress_s": tcomp_total[0],
@@ -329,6 +364,8 @@ class BpReader:
         self._blobs: dict[int, bytes] = {}        # step -> validated md.0 blob
         self._meta: dict[int, dict] = {}          # step -> parsed record cache
         self.idx_records: dict[int, dict] = {}    # step -> md.idx fields
+        self._data_handles: dict[int, Any] = {}   # agg -> cached payload handle
+        self._io_lock = threading.Lock()          # seek+read must be atomic
         self._load_index()
 
     def _load_index(self):
@@ -501,30 +538,55 @@ class BpReader:
         name -> {dtype, shape, steps, chunks_per_step, raw, stored}."""
         return self.scan(steps)["variables"]
 
-    def _read_payload(self, agg: int, foff: int, nbytes: int) -> bytes:
+    def _data_file(self, agg: int):
+        """Cached per-aggregator payload handle (InstrumentedFile for plain
+        subfiles, read-mode StripedFile for striped layouts) — a multi-chunk
+        read_var no longer reopens data.<agg> once per chunk."""
+        f = self._data_handles.get(agg)
+        if f is not None:
+            return f
         plain = self.path / f"data.{agg}"
         if plain.exists():
-            with open_file(plain, "rb") as f:
-                f.seek(foff)
-                return f.read(nbytes)
-        # striped layout: reconstruct via StripedFile read
-        osts = sorted(self.path.glob("ost*"))
-        n_osts = len(osts)
-        objs = sorted(self.path.glob(f"ost*/data.{agg}.obj"))
-        assert objs, f"no data for aggregator {agg}"
-        # stripe params are discoverable from the writer config file; for
-        # robustness store them alongside: meta sidecar
-        side = self.path / f"data.{agg}.stripe.json"
-        cfgd = json.loads(side.read_text()) if side.exists() else {
-            "stripe_count": len(objs), "stripe_size": C.DEFAULT_BLOCK}
-        from repro.core.striping import OstPool, StripeConfig, StripedFile
-        pool = OstPool(self.path, n_osts)
-        sf = StripedFile.__new__(StripedFile)
-        sf.pool = pool
-        sf.name = f"data.{agg}"
-        sf.cfg = StripeConfig(cfgd["stripe_count"], cfgd["stripe_size"])
-        sf.rank = 0
-        return sf.read(foff, nbytes)
+            f = open_file(plain, "rb")
+        else:
+            # striped layout: reconstruct via a read-mode StripedFile
+            n_osts = len(sorted(self.path.glob("ost*")))
+            objs = sorted(self.path.glob(f"ost*/data.{agg}.obj"))
+            if not objs:
+                raise FileNotFoundError(f"no data for aggregator {agg} "
+                                        f"under {self.path}")
+            # stripe params are discoverable from the writer config file; for
+            # robustness store them alongside: meta sidecar
+            side = self.path / f"data.{agg}.stripe.json"
+            cfgd = json.loads(side.read_text()) if side.exists() else {
+                "stripe_count": len(objs), "stripe_size": C.DEFAULT_BLOCK}
+            pool = OstPool(self.path, n_osts)
+            f = StripedFile(pool, f"data.{agg}",
+                            StripeConfig(cfgd["stripe_count"],
+                                         cfgd["stripe_size"]),
+                            rank=0, mode="r")
+        self._data_handles[agg] = f
+        return f
+
+    def _read_payload(self, agg: int, foff: int, nbytes: int) -> bytes:
+        f = self._data_file(agg)
+        if isinstance(f, StripedFile):
+            return f.read(foff, nbytes)      # StripedFile locks internally
+        with self._io_lock:
+            f.seek(foff)
+            return f.read(nbytes)
+
+    def close(self):
+        """Release cached payload handles (metadata stays queryable)."""
+        handles, self._data_handles = self._data_handles, {}
+        for f in handles.values():
+            f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
 
     def read_var(self, step: int, name: str,
                  offset: Optional[tuple] = None,

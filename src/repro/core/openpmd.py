@@ -25,6 +25,12 @@ index record is on disk, `Series.drain()` is the barrier that guarantees it
 for every queued step, and `close()` implies `drain()`. The openPMD "chunks
 stay unmodified until flush" contract thereby RELAXES to "until end of
 flush()": the caller may reuse buffers as soon as flush returns.
+
+Multi-process I/O: `Series(..., parallel_io=W)` swaps in the
+`repro.core.parallel_engine.ParallelBpWriter` — W REAL writer processes,
+each owning one aggregated subfile, committed per step by a rank-0
+two-phase commit. Mutually exclusive with `async_io`; the on-disk series
+is read-compatible with every other engine.
 """
 from __future__ import annotations
 
@@ -166,12 +172,18 @@ class Series:
     def __init__(self, path, mode: str = "w", *, n_ranks: int = 1,
                  engine_config: EngineConfig = EngineConfig(),
                  meta: Optional[dict] = None, async_io: bool = False,
-                 queue_depth: int = 2):
+                 queue_depth: int = 2, parallel_io: int = 0):
         self.path = pathlib.Path(str(path))
         self.mode = mode
         self.n_ranks = n_ranks
         self.engine_config = engine_config
+        if parallel_io and async_io:
+            raise ValueError(
+                "async_io and parallel_io are mutually exclusive engines "
+                "(the parallel write plane commits synchronously at "
+                "end_step; overlap comes from its W writer processes)")
         self.async_io = async_io
+        self.parallel_io = int(parallel_io)
         self.queue_depth = queue_depth
         self.iterations = _Container(lambda k: Iteration(k, self))
         self._dirty: set[RecordComponent] = set()
@@ -201,7 +213,12 @@ class Series:
             # reopen md.0/md.idx with "wb" and truncate sealed iterations
             raise RuntimeError(f"Series {self.path} is closed")
         if self._writer is None:
-            if self.async_io:
+            if self.parallel_io:
+                from repro.core.parallel_engine import ParallelBpWriter
+                self._writer = ParallelBpWriter(self.path, self.n_ranks,
+                                                self.engine_config,
+                                                n_writers=self.parallel_io)
+            elif self.async_io:
                 from repro.core.async_engine import AsyncBpWriter
                 self._writer = AsyncBpWriter(self.path, self.n_ranks,
                                              self.engine_config,
@@ -257,6 +274,11 @@ class Series:
         finally:
             self._closed = True
             self._dirty.clear()
+            if self._reader_obj is not None:
+                # the reader caches one open handle per subfile now —
+                # a closed Series must not keep M data.* fds alive
+                r, self._reader_obj = self._reader_obj, None
+                r.close()
             if self._writer is not None:
                 w, self._writer = self._writer, None
                 w.close()            # async: drains; cleanup-then-raise

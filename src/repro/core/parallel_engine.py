@@ -1,0 +1,397 @@
+"""Multi-process parallel write plane for the JBP engine (paper §IV-C).
+
+The paper's headline claim is *parallel* I/O: N ranks streaming
+simultaneously into M aggregated BP4 subfiles. `BpWriter` reproduces the
+format but drives every "rank" from one Python process — aggregate write
+throughput is bounded by one process and one GIL. `ParallelBpWriter`
+makes the write plane real:
+
+    coordinator (rank 0)                 writer process w (of W)
+    --------------------                 -----------------------
+    put() routes chunks by               owns data.<w>   (SubfileSet owned={w})
+    aggregator_of(rank, N, W)            owns md.<w>.shard (private metadata)
+    end_step():
+      phase 1  PREPARE  ---- chunks ---> compress -> append data.<w>
+                                         -> sealed shard record -> ack
+               validate every sealed
+               shard record (crc) read
+               back from md.<w>.shard
+      phase 2  COMMIT
+               merge shard chunk tables
+               -> md.0 record
+               -> crc-sealed md.idx record
+
+Durability is a TWO-PHASE COMMIT: a worker's sealed shard record is its
+"prepared" vote; the crc-sealed md.idx record written by the coordinator
+is the commit. A crash (or worker failure) anywhere before the commit
+leaves shard records and payload bytes with no md.idx record — the step
+is dropped by `BpReader` exactly like a torn step today, and orphaned
+shard/payload bytes are dead weight, never wrong data. `md.0`/`md.idx`
+are byte-compatible with the single-process writer, so the reader needs
+ZERO format changes (shards are a writer-side artifact; `md.0` remains
+the reader-visible merged metadata).
+
+Worker processes are spawned (never forked — the parent may hold JAX/XLA
+runtime threads) via `launch.distributed.spawn_io_workers`; chunk arrays
+travel down per-worker task queues, so compression + subfile appends +
+shard seals run with W-way real parallelism across processes.
+
+Shard record format (md.<w>.shard, append-only log):
+
+    <QQI: step, blob_len, crc32(blob)> <blob: {"step", "chunks": {name: [...]}}>
+
+`iter_shard_records` replays a shard and stops at the first torn record —
+the recovery primitive for crashed writers. Note a shard may contain
+sealed records for steps that were never committed (prepare succeeded,
+commit did not); md.idx is always the commit truth.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import queue as _queue
+import struct
+import time
+import traceback
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.aggregation import SubfileSet, aggregator_of
+from repro.core.bp_engine import (ChunkMeta, EngineConfig, build_md_record,
+                                  chunk_stats, seal_md_record,
+                                  validate_put_rank)
+from repro.core.darshan import open_file
+from repro.core.striping import OstPool
+from repro.launch.distributed import spawn_io_workers
+
+SHARD_HDR = struct.Struct("<QQI")      # step, blob_len, crc32(blob)
+
+
+def shard_path(path, w: int) -> pathlib.Path:
+    return pathlib.Path(str(path)) / f"md.{w}.shard"
+
+
+def iter_shard_records(path, w: int):
+    """Replay writer `w`'s metadata shard: yield (step, record) for every
+    crc-valid sealed record, stopping at the first torn/corrupt one (the
+    shard is an append-only log, so a torn tail is the crash case)."""
+    p = shard_path(path, w)
+    if not p.exists():
+        return
+    raw = p.read_bytes()
+    off = 0
+    while off + SHARD_HDR.size <= len(raw):
+        step, ln, crc = SHARD_HDR.unpack_from(raw, off)
+        blob = raw[off + SHARD_HDR.size:off + SHARD_HDR.size + ln]
+        if len(blob) != ln or (zlib.crc32(blob) & 0xFFFFFFFF) != crc:
+            return
+        yield step, json.loads(blob)
+        off += SHARD_HDR.size + ln
+
+
+# --------------------------------------------------------------------- worker
+def _worker_main(w: int, path_str: str, n_writers: int, cfg: EngineConfig,
+                 task_q, result_q):
+    """One writer process: owns data.<w> + md.<w>.shard for its lifetime.
+
+    Protocol (every message is (tag, w, step, payload)):
+      in:  ("step", step, items)  items = [(name, rank, offset, array), ...]
+           ("close", None, None)
+      out: ("ready", w, None, None)           files open, accepting steps
+           ("prepared", w, step, info)        payload + shard sealed on disk
+           ("error", w, step, traceback_str)  step failed; worker stays alive
+           ("closed", w, None, None)          files fsynced + closed
+    """
+    path = pathlib.Path(path_str)
+    try:
+        ost_pool = (OstPool(path, cfg.n_osts)
+                    if cfg.stripe is not None else None)
+        subfiles = SubfileSet(path, n_writers, stripe=cfg.stripe,
+                              ost_pool=ost_pool, owned=(w,))
+        shard = open_file(shard_path(path, w), "wb", rank=w)
+    except BaseException:                       # noqa: BLE001
+        result_q.put(("error", w, None, traceback.format_exc()))
+        return
+    result_q.put(("ready", w, None, None))
+    while True:
+        msg = task_q.get()
+        tag = msg[0]
+        if tag == "close":
+            subfiles.fsync_close()
+            shard.fsync()
+            shard.close()
+            result_q.put(("closed", w, None, None))
+            return
+        _, step, items = msg
+        try:
+            t0 = time.perf_counter()
+            tcomp = 0.0
+            payloads, metas = [], []
+            for name, rank, offset, arr in items:
+                tc = time.perf_counter()
+                payload = C.array_payload(arr, cfg.codec,
+                                          block=cfg.compression_block)
+                tcomp += time.perf_counter() - tc
+                payloads.append(payload)
+                metas.append((name, rank, offset, arr.shape, len(payload),
+                              chunk_stats(arr)))
+            base = subfiles.append(w, b"".join(payloads))
+            off = base
+            chunks: dict[str, list] = {}
+            for name, rank, offset, shape, nb, (vmin, vmax) in metas:
+                chunks.setdefault(name, []).append(
+                    ChunkMeta(rank, tuple(offset), tuple(shape), w, off, nb,
+                              vmin, vmax).to_json())
+                off += nb
+            blob = json.dumps({"step": step, "chunks": chunks}).encode()
+            crc = zlib.crc32(blob) & 0xFFFFFFFF
+            # the record offset is re-derived from the file position every
+            # step: a previous FAILED step may have left (torn) bytes in
+            # the shard, and a stale counter would desync every later
+            # commit ("worker stays alive" requires this)
+            rec_off = shard.tell()
+            shard.write(SHARD_HDR.pack(step, len(blob), crc))
+            shard.write(blob)
+            if cfg.fsync_policy == "step":
+                subfiles.fsync_one(w)
+                shard.fsync()
+            else:
+                subfiles.flush_one(w)
+                shard.flush()      # coordinator reads the record back NOW
+            info = {"shard_off": rec_off,
+                    "shard_len": SHARD_HDR.size + len(blob), "crc": crc,
+                    "compress_s": tcomp, "bytes_stored": off - base,
+                    "worker_s": time.perf_counter() - t0}
+            result_q.put(("prepared", w, step, info))
+        except BaseException:                   # noqa: BLE001
+            result_q.put(("error", w, step, traceback.format_exc()))
+
+
+# ---------------------------------------------------------------- coordinator
+class ParallelBpWriter:
+    """BpWriter-protocol writer backed by W real writer processes.
+
+    Drop-in for `BpWriter` on the producer side (begin_step/put/
+    set_attribute/end_step/close; `drain()` is a no-op — end_step is the
+    commit barrier). The number of aggregators equals the number of writer
+    processes: each process owns its subfile outright, which is what makes
+    the plane coordination-free between commits.
+    """
+
+    def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig(),
+                 *, n_writers: Optional[int] = None, ack_timeout: float = 300.0):
+        self.path = pathlib.Path(str(path))
+        self.path.mkdir(parents=True, exist_ok=True)
+        self.cfg = cfg
+        self.n_ranks = n_ranks
+        w = n_writers if n_writers is not None else cfg.aggregators
+        self.m = min(max(1, int(w)), max(n_ranks, 1))
+        self.ack_timeout = ack_timeout
+        if cfg.stripe is not None:
+            OstPool(self.path, cfg.n_osts)      # create ost dirs up front
+            for i in range(self.m):
+                (self.path / f"data.{i}.stripe.json").write_text(json.dumps(
+                    {"stripe_count": cfg.stripe.stripe_count,
+                     "stripe_size": cfg.stripe.stripe_size}))
+        self._md = open_file(self.path / "md.0", "wb", rank=0)
+        self._idx = open_file(self.path / "md.idx", "wb", rank=0)
+        self._md_off = 0
+        self._step: Optional[int] = None
+        self._pending: dict[str, dict] = {}
+        self._attrs: dict[str, Any] = {}
+        self._profile: list[dict] = []
+        self._closed = False
+        self._crash_after_prepare = False       # test hook: torn-commit sim
+        try:
+            self._workers, self._result_q = spawn_io_workers(
+                self.m, _worker_main,
+                lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq))
+            self._collect("ready", range(self.m))   # spawn failures surface here
+        except BaseException:
+            # a failed bring-up must not leak the md handles OR the
+            # workers that DID come up (they would block on task_q.get
+            # holding their subfile/shard fds until parent exit)
+            self._md.close()
+            self._idx.close()
+            for p, _ in getattr(self, "_workers", []):
+                if p.is_alive():
+                    p.terminate()
+                p.join(timeout=2.0)
+            raise
+
+    # ------------------------------------------------------------------ step
+    def begin_step(self, step: int):
+        assert self._step is None, "previous step not closed"
+        self._step = step
+        self._pending = {}
+
+    def set_attribute(self, name: str, value):
+        self._attrs[name] = value
+
+    def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
+            offset: tuple, rank: int):
+        """Register one rank's chunk of variable `name` for this step."""
+        assert self._step is not None, "put() outside begin/end_step"
+        validate_put_rank(rank, self.n_ranks)
+        a = np.ascontiguousarray(array)
+        var = self._pending.setdefault(name, {
+            "dtype": a.dtype.str, "shape": tuple(int(x) for x in global_shape),
+            "chunks": []})
+        assert var["shape"] == tuple(int(x) for x in global_shape), name
+        var["chunks"].append((rank, tuple(int(x) for x in offset), a))
+
+    # ----------------------------------------------------------- ack plumbing
+    def _collect(self, kind: str, expect, step: Optional[int] = None) -> dict:
+        """Wait for one `kind` ack per worker in `expect`; raise on worker
+        errors or deaths. Acks for other steps (stale messages from an
+        aborted step) are ignored."""
+        pending = set(expect)
+        got: dict[int, Any] = {}
+        errors: list[tuple[int, str]] = []
+        deadline = time.monotonic() + self.ack_timeout
+        while pending:
+            try:
+                tag, wid, mstep, payload = self._result_q.get(timeout=1.0)
+            except _queue.Empty:
+                dead = [i for i in pending
+                        if not self._workers[i][0].is_alive()]
+                if dead:
+                    raise RuntimeError(
+                        f"writer process(es) {dead} died before acking "
+                        f"{kind!r} — step aborted (not committed)")
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"timed out after {self.ack_timeout}s waiting for "
+                        f"{kind!r} from writer(s) {sorted(pending)}")
+                continue
+            if tag == "error":
+                if step is not None and mstep is not None and mstep != step:
+                    continue       # stale error from an already-aborted step
+                errors.append((wid, payload))
+                pending.discard(wid)
+            elif tag == kind and (step is None or mstep == step):
+                got[wid] = payload
+                pending.discard(wid)
+            # anything else: stale ack from an aborted step — drop it
+        if errors:
+            detail = "\n".join(f"--- writer {i} ---\n{tb}"
+                               for i, tb in errors)
+            raise RuntimeError(
+                f"parallel write failed on writer(s) "
+                f"{[i for i, _ in errors]}:\n{detail}")
+        return got
+
+    def _read_shard_record(self, wid: int, info: dict, step: int) -> dict:
+        """Phase-1 validation: read the sealed shard record back from disk
+        and crc-check it — the coordinator commits only what is durably
+        prepared. A torn/corrupt shard aborts the step like a torn step."""
+        with open_file(shard_path(self.path, wid), "rb", rank=0) as f:
+            f.seek(info["shard_off"])
+            raw = f.read(info["shard_len"])
+        if len(raw) < SHARD_HDR.size:
+            raise RuntimeError(f"torn shard record from writer {wid} "
+                               f"(step {step} not committed)")
+        rstep, ln, crc = SHARD_HDR.unpack_from(raw, 0)
+        blob = raw[SHARD_HDR.size:SHARD_HDR.size + ln]
+        if (rstep != step or len(blob) != ln
+                or (zlib.crc32(blob) & 0xFFFFFFFF) != crc):
+            raise RuntimeError(f"torn shard record from writer {wid} "
+                               f"(step {step} not committed)")
+        return json.loads(blob)
+
+    # ------------------------------------------------------------------ commit
+    def end_step(self) -> dict:
+        assert self._step is not None, "end_step() outside begin_step()"
+        step = self._step
+        pending = self._pending
+        self._step = None
+        self._pending = {}
+        t0 = time.perf_counter()
+
+        by_w: dict[int, list] = {}
+        n_bytes_raw = 0
+        for name, var in pending.items():
+            for rank, offset, arr in var["chunks"]:
+                n_bytes_raw += arr.nbytes
+                wid = aggregator_of(rank, self.n_ranks, self.m)
+                by_w.setdefault(wid, []).append((name, rank, offset, arr))
+
+        # ---- phase 1: PREPARE — fan chunks out, await sealed-shard votes
+        for wid, items in by_w.items():
+            self._workers[wid][1].put(("step", step, items))
+        acks = self._collect("prepared", by_w, step=step)
+        merged: dict[str, list] = {name: [] for name in pending}
+        for wid in sorted(acks):
+            rec = self._read_shard_record(wid, acks[wid], step)
+            for name, chunk_list in rec["chunks"].items():
+                merged[name].extend(chunk_list)
+        t_prepare = time.perf_counter() - t0
+
+        if self._crash_after_prepare:
+            raise RuntimeError("simulated coordinator crash between "
+                               "prepare and commit")
+
+        # ---- phase 2: COMMIT — merge shard chunk tables into md.0/md.idx
+        # (record layout and seal ordering live in bp_engine so every
+        # engine commits identically — byte parity is not re-implemented)
+        md_rec = build_md_record(step, dict(self._attrs), pending, merged)
+        blob = json.dumps(md_rec).encode()
+        self._md_off = seal_md_record(
+            self._md, self._idx, self._md_off, step, blob,
+            fsync_step=self.cfg.fsync_policy == "step")
+
+        dt = time.perf_counter() - t0
+        prof = {"step": step, "write_s": dt, "prepare_s": t_prepare,
+                "commit_s": dt - t_prepare,
+                "compress_s": sum(a["compress_s"] for a in acks.values()),
+                "bytes_raw": n_bytes_raw,
+                "bytes_stored": sum(a["bytes_stored"] for a in acks.values()),
+                "aggregators": self.m, "writers": self.m,
+                "worker_s": {str(wid): acks[wid]["worker_s"]
+                             for wid in sorted(acks)}}
+        self._profile.append(prof)
+        return prof
+
+    def drain(self):
+        """No-op barrier: end_step() already commits synchronously."""
+
+    # ------------------------------------------------------------------ close
+    def _profile_doc(self) -> dict:
+        return {"engine": "JBP(BP4-parallel)", "aggregators": self.m,
+                "writers": self.m, "codec": self.cfg.codec,
+                "steps": self._profile}
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        errors: list[BaseException] = []
+        for _, tq in self._workers:
+            tq.put(("close", None, None))
+        try:
+            self._collect("closed", [i for i, (p, _) in
+                                     enumerate(self._workers)
+                                     if p.is_alive()])
+        except BaseException as e:              # noqa: BLE001
+            errors.append(e)
+        for p, _ in self._workers:
+            p.join(timeout=10.0)
+        if self.cfg.fsync_policy != "step":
+            self._md.fsync()
+            self._idx.fsync()
+        self._md.close()
+        self._idx.close()
+        if self.cfg.profiling:
+            with open_file(self.path / "profiling.json", "w", rank=0) as f:
+                f.write(json.dumps(self._profile_doc(), indent=1))
+        if errors:
+            raise errors[0]
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

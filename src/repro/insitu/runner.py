@@ -38,13 +38,18 @@ def reduce_posthoc(series: Union[str, BpReader], rset: ReducerSet,
     """Replay a series on disk through the reducers, in sorted step order
     (the same order a live FIFO consumer observed). Only the variables the
     reducers declare in `needs` are read from the subfiles."""
-    reader = series if isinstance(series, BpReader) else BpReader(series)
+    own_reader = not isinstance(series, BpReader)
+    reader = BpReader(series) if own_reader else series
     needed = rset.needed_vars
-    for step in (reader.valid_steps() if steps is None else steps):
-        names = reader.var_names(step)
-        if needed is not None:
-            names = [n for n in names if n in needed]
-        rset.update(step, {n: reader.read_var(step, n) for n in names})
+    try:
+        for step in (reader.valid_steps() if steps is None else steps):
+            names = reader.var_names(step)
+            if needed is not None:
+                names = [n for n in names if n in needed]
+            rset.update(step, {n: reader.read_var(step, n) for n in names})
+    finally:
+        if own_reader:
+            reader.close()      # release the cached subfile handles
     return rset.results()
 
 

@@ -23,8 +23,9 @@ is the deployable one:
 """
 from __future__ import annotations
 
+import multiprocessing
 import os
-from typing import Optional
+from typing import Callable, Optional
 
 
 def initialize(coordinator: Optional[str] = None,
@@ -53,3 +54,40 @@ def io_rank_range(n_io_ranks: int, process_id: int, num_processes: int):
     lo = process_id * n_io_ranks // num_processes
     hi = (process_id + 1) * n_io_ranks // num_processes
     return range(lo, hi)
+
+
+def writer_rank_range(w: int, n_ranks: int, n_writers: int) -> range:
+    """Ranks owned by writer/aggregator `w` — the exact inverse image of
+    `aggregation.aggregator_of`'s contiguous block assignment, so a writer
+    process knows up front which ranks' chunks it will receive."""
+    m = min(n_writers, max(n_ranks, 1))
+    lo = -(-w * n_ranks // m)              # ceil(w * n_ranks / m)
+    hi = -(-(w + 1) * n_ranks // m)
+    return range(lo, hi)
+
+
+def spawn_io_workers(n_workers: int, target: Callable, make_args: Callable,
+                     *, method: str = "spawn"):
+    """Spawn REAL I/O writer processes (the multi-process write plane of
+    repro.core.parallel_engine — this is the layer io_rank_range used to
+    stub out with logical threads).
+
+    `target` must be a module-level function (picklable by reference under
+    the spawn start method — spawn, not fork, because the parent may hold
+    JAX/XLA runtime threads that do not survive a fork). `make_args(w,
+    task_q, result_q)` builds the argument tuple for worker `w`.
+
+    Returns ([(process, task_queue)], result_queue): one task queue per
+    worker (commands flow down), one shared result queue (acks flow up).
+    Workers are daemonic, so an abnormal parent exit reaps them.
+    """
+    ctx = multiprocessing.get_context(method)
+    result_q = ctx.Queue()
+    workers = []
+    for w in range(n_workers):
+        task_q = ctx.Queue()
+        p = ctx.Process(target=target, args=make_args(w, task_q, result_q),
+                        name=f"jbp-io-{w}", daemon=True)
+        p.start()
+        workers.append((p, task_q))
+    return workers, result_q

@@ -166,14 +166,23 @@ def write_diagnostics_openpmd(series, state: PicState, cfg: PicConfig,
 
 
 def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
-                           engine_config=None, queue_depth: int = 2):
+                           engine_config=None, queue_depth: int = 2,
+                           parallel_io: int = 0):
     """Series for BIT1-style diagnostic output, async by default so dumps
-    never stall the push/deposit loop."""
+    never stall the push/deposit loop.
+
+    `parallel_io=W` opts in to the multi-process write plane instead: W
+    real writer processes stream into W aggregated subfiles (compression
+    and subfile appends leave this process entirely), each dump committed
+    by a two-phase commit at end_step. Overrides async_io."""
     from repro.core.bp_engine import EngineConfig
     from repro.core.openpmd import Series
     if engine_config is None:
         engine_config = EngineConfig(aggregators=min(4, n_io_ranks),
                                      codec="blosc")
+    if parallel_io:
+        return Series(path, "w", n_ranks=n_io_ranks,
+                      engine_config=engine_config, parallel_io=parallel_io)
     return Series(path, "w", n_ranks=n_io_ranks, engine_config=engine_config,
                   async_io=async_io, queue_depth=queue_depth)
 

@@ -1,0 +1,125 @@
+"""WriterPool failure semantics, SubfileSet ownership, aggregator_of
+validation — the regression suite for the work-stealing bugfixes."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import SubfileSet, WriterPool, aggregator_of
+
+
+def _drain_with_timeout(pool, timeout=10.0):
+    """Run drain() on a helper thread so a regression (hung drain) fails
+    the test instead of hanging the suite."""
+    result = {}
+
+    def run():
+        try:
+            pool.drain()
+            result["ok"] = True
+        except BaseException as e:              # noqa: BLE001
+            result["err"] = e
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), "drain() hung — worker thread died on a task"
+    return result
+
+
+def test_pool_survives_failing_task():
+    """A failing task must not kill its worker: the pool keeps draining
+    and drain() raises the recorded task error."""
+    pool = WriterPool(2)
+    done = []
+
+    def bad():
+        raise OSError("injected task failure")
+
+    pool.submit(bad)
+    for i in range(8):
+        pool.submit(done.append, i)
+    result = _drain_with_timeout(pool)
+    assert isinstance(result.get("err"), OSError)
+    assert sorted(done) == list(range(8)), "tasks after the failure ran"
+    # the pool is still fully usable: same workers, clean drain
+    pool.submit(done.append, 99)
+    assert _drain_with_timeout(pool).get("ok") is True
+    assert 99 in done
+    pool.shutdown()
+
+
+def test_pool_first_error_wins_and_clears():
+    pool = WriterPool(1)
+
+    def fail(msg):
+        raise ValueError(msg)
+
+    pool.submit(fail, "first")
+    pool.submit(fail, "second")
+    with pytest.raises(ValueError, match="first"):
+        pool.drain()
+    # the error was consumed; a clean drain follows
+    pool.drain()
+    pool.shutdown()
+
+
+def test_pool_shutdown_raises_pending_error_but_stops_workers():
+    pool = WriterPool(2)
+    pool.submit(lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    with pytest.raises(RuntimeError, match="boom"):
+        pool.shutdown()
+    time.sleep(0.15)
+    assert all(not t.is_alive() for t in pool._threads)
+
+
+# ---------------------------------------------------------------- SubfileSet
+def test_subfileset_owned_subset(tmpdir_path):
+    s = SubfileSet(tmpdir_path, 4, owned=(2,))
+    assert s.append(2, b"abcd") == 0
+    assert s.append(2, b"efgh") == 4
+    with pytest.raises(ValueError, match="not owned"):
+        s.append(0, b"nope")
+    s.fsync_close()
+    assert (tmpdir_path / "data.2").read_bytes() == b"abcdefgh"
+    assert not (tmpdir_path / "data.0").exists(), \
+        "an owned SubfileSet must not create other processes' subfiles"
+
+
+def test_subfileset_owned_validation(tmpdir_path):
+    with pytest.raises(ValueError, match="out of range"):
+        SubfileSet(tmpdir_path, 2, owned=(5,))
+
+
+def test_subfileset_default_owns_all(tmpdir_path):
+    s = SubfileSet(tmpdir_path, 3)
+    for i in range(3):
+        s.append(i, bytes([i]) * 4)
+    s.fsync_close()
+    assert sorted(p.name for p in tmpdir_path.glob("data.*")) == \
+        ["data.0", "data.1", "data.2"]
+
+
+# -------------------------------------------------------------- aggregator_of
+def test_aggregator_of_validates_rank():
+    with pytest.raises(ValueError, match="out of range"):
+        aggregator_of(8, 8, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        aggregator_of(-1, 8, 4)
+    with pytest.raises(ValueError, match="n_ranks"):
+        aggregator_of(0, 0, 4)
+    assert aggregator_of(7, 8, 4) == 3
+
+
+def test_writer_rank_range_inverts_aggregator_of():
+    from repro.launch.distributed import writer_rank_range
+    for n_ranks in (1, 3, 8, 17):
+        for m in (1, 2, 4, 5):
+            mm = min(m, n_ranks)
+            for w in range(mm):
+                for r in writer_rank_range(w, n_ranks, m):
+                    assert aggregator_of(r, n_ranks, m) == w
+            covered = sorted(r for w in range(mm)
+                             for r in writer_rank_range(w, n_ranks, m))
+            assert covered == list(range(n_ranks))

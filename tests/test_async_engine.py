@@ -129,6 +129,42 @@ def test_fsync_step_policy_forces_blocking_seal(tmpdir_path):
     w.close()
 
 
+def test_check_error_raises_fresh_chained_exceptions(tmpdir_path):
+    """Every surfacing of a background failure must be a FRESH exception
+    chained to the original via __cause__ — re-raising one stored object
+    would accrete a traceback frame per call site and misreport where the
+    failure was raised."""
+    w = AsyncBpWriter(tmpdir_path / "s.bp4", 1,
+                      EngineConfig(codec="no-such-codec"))
+    w.begin_step(0)
+    w.put("v", np.arange(4, dtype=np.float32), global_shape=(4,),
+          offset=(0,), rank=0)
+    w.end_step()
+    with pytest.raises(ValueError) as e1:
+        w.drain()
+    with pytest.raises(ValueError) as e2:
+        w.drain()
+    assert e1.value is not e2.value, "same exception object re-raised"
+    original = w._writer_error
+    assert e1.value.__cause__ is original and e2.value.__cause__ is original
+    assert str(e1.value) == str(original)
+    # the original's traceback must not have grown from the re-raises
+    depth = 0
+    tb = original.__traceback__
+    while tb is not None:
+        depth += 1
+        tb = tb.tb_next
+    with pytest.raises(ValueError):
+        w.drain()
+    tb, grown = original.__traceback__, 0
+    while tb is not None:
+        grown += 1
+        tb = tb.tb_next
+    assert grown == depth, "original traceback accreted frames"
+    with pytest.raises(ValueError):
+        w.close()
+
+
 def test_writer_error_propagates_to_producer(tmpdir_path):
     w = AsyncBpWriter(tmpdir_path / "s.bp4", 4,
                       EngineConfig(codec="no-such-codec"))

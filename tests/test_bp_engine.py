@@ -103,6 +103,60 @@ def test_read_var_box_of_compressed_chunks(tmpdir_path, codec):
     assert lo == float(truth[0].min()) and hi == float(truth[0].max())
 
 
+def test_put_rejects_out_of_range_rank(tmpdir_path):
+    """put(rank=n_ranks) used to die deep in SubfileSet with an opaque
+    IndexError; it must be a clear ValueError at the put() boundary."""
+    w = BpWriter(tmpdir_path / "s.bp4", 4, EngineConfig(aggregators=2))
+    w.begin_step(0)
+    with pytest.raises(ValueError, match=r"rank=4.*n_ranks=4"):
+        w.put("v", np.zeros(4, np.float32), global_shape=(4,), offset=(0,),
+              rank=4)
+    with pytest.raises(ValueError, match="rank=-1"):
+        w.put("v", np.zeros(4, np.float32), global_shape=(4,), offset=(0,),
+              rank=-1)
+    w.put("v", np.zeros(4, np.float32), global_shape=(4,), offset=(0,),
+          rank=3)
+    w.end_step()
+    w.close()
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0]
+
+
+def test_reader_caches_subfile_handles(tmpdir_path):
+    """A multi-chunk read_var must open data.<agg> once, not once per
+    chunk (8 chunks in one aggregator -> 1 open)."""
+    from repro.core.darshan import MONITOR
+    _write_series(tmpdir_path / "s.bp4", n_ranks=8, aggregators=1)
+    MONITOR.reset()
+    r = BpReader(tmpdir_path / "s.bp4")
+    r.read_var(0, "var/x")
+    r.read_var(1, "var/x")
+    files = MONITOR.report()["files"]
+    opens = sum(c.get("POSIX_OPENS", 0) for p, c in files.items()
+                if p.endswith("data.0"))
+    reads = sum(c.get("POSIX_READS", 0) for p, c in files.items()
+                if p.endswith("data.0"))
+    assert opens == 1, f"data.0 reopened per chunk ({opens} opens)"
+    assert reads == 16                     # payload reads still per chunk
+    r.close()
+
+
+def test_reader_striped_getstripe_roundtrip(tmpdir_path):
+    """The striped read path constructs a REAL read-mode StripedFile:
+    getstripe() works on it (the __new__ hack used to leave the object
+    half-built and AttributeError out)."""
+    from repro.core.striping import StripedFile
+    truth = _write_series(tmpdir_path / "s.bp4", aggregators=2,
+                          stripe=StripeConfig(stripe_count=2, stripe_size=256))
+    r = BpReader(tmpdir_path / "s.bp4")
+    np.testing.assert_array_equal(r.read_var(0, "var/x"), truth[0])
+    sf = r._data_file(0)
+    assert isinstance(sf, StripedFile)
+    info = sf.getstripe()
+    assert info["lmm_stripe_count"] == 2 and info["logical_size"] > 0
+    r.close()
+
+
 def test_torn_step_is_dropped(tmpdir_path):
     """Crash consistency: corrupt md.0 bytes -> that step invalid, rest ok."""
     _write_series(tmpdir_path / "s.bp4", steps=3)

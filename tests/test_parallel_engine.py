@@ -1,0 +1,302 @@
+"""Multi-process parallel write plane: W-process parity with the sync
+single-process writer, two-phase commit semantics, torn-shard recovery,
+and the parallel_io wiring through Series / PIC / checkpoints."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.parallel_engine import (ParallelBpWriter, iter_shard_records,
+                                        shard_path)
+from repro.core.striping import StripeConfig
+
+
+def _write_series(cls, path, *, n_ranks=8, codec="none", steps=3,
+                  stripe=None, fsync_policy="close", **kw):
+    cfg = EngineConfig(aggregators=4, codec=codec, workers=3, stripe=stripe,
+                       n_osts=4, fsync_policy=fsync_policy)
+    w = cls(path, n_ranks, cfg, **kw)
+    rng = np.random.default_rng(11)
+    truth = {}
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(n_ranks * 16, 4)).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16],
+                  global_shape=g.shape, offset=(r * 16, 0), rank=r)
+        w.put("scalar/t", np.array([s], np.int64), global_shape=(1,),
+              offset=(0,), rank=0)
+        w.end_step()
+    w.close()
+    return truth
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("codec", ["none", "blosc"])
+def test_parallel_matches_sync_byte_for_byte(tmpdir_path, codec):
+    """W=4 REAL processes must produce data.*/md.0 byte-identical to the
+    single-process sync writer for the same puts — the reader needs zero
+    format changes (acceptance criterion of the parallel write plane)."""
+    truth = _write_series(BpWriter, tmpdir_path / "sync.bp4", codec=codec)
+    _write_series(ParallelBpWriter, tmpdir_path / "par.bp4", codec=codec,
+                  n_writers=4)
+    for name in ["data.0", "data.1", "data.2", "data.3", "md.0"]:
+        a = (tmpdir_path / "sync.bp4" / name).read_bytes()
+        b = (tmpdir_path / "par.bp4" / name).read_bytes()
+        assert a == b, f"{name} differs between sync and parallel writes"
+    r = BpReader(tmpdir_path / "par.bp4")
+    assert r.valid_steps() == [0, 1, 2]
+    for s, g in truth.items():
+        np.testing.assert_array_equal(r.read_var(s, "var/x"), g)
+        np.testing.assert_array_equal(r.read_var(s, "scalar/t"),
+                                      np.array([s], np.int64))
+    # semantic metadata parity: same chunk tables through the query layer
+    rs = BpReader(tmpdir_path / "sync.bp4")
+    assert rs.variables() == r.variables()
+    assert rs.layout() == r.layout()
+
+
+def test_parallel_box_selection_across_subfiles(tmpdir_path):
+    truth = _write_series(ParallelBpWriter, tmpdir_path / "p.bp4",
+                          n_writers=4)
+    r = BpReader(tmpdir_path / "p.bp4")
+    sel = r.read_var(1, "var/x", offset=(24, 1), extent=(80, 2))
+    np.testing.assert_array_equal(sel, truth[1][24:104, 1:3])
+
+
+def test_parallel_striped_roundtrip(tmpdir_path):
+    """Each writer process stripes its own subfile over the shared OST
+    dirs; the striped layout reads back through the standard reader."""
+    truth = _write_series(ParallelBpWriter, tmpdir_path / "p.bp4",
+                          n_writers=2, n_ranks=4, steps=2,
+                          stripe=StripeConfig(stripe_count=2, stripe_size=256))
+    r = BpReader(tmpdir_path / "p.bp4")
+    np.testing.assert_array_equal(r.read_var(1, "var/x"), truth[1])
+
+
+def test_parallel_writer_count_clamped(tmpdir_path):
+    """n_writers > n_ranks clamps like aggregators do (one process per
+    rank at most)."""
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 2, EngineConfig(),
+                         n_writers=8)
+    assert w.m == 2
+    w.begin_step(0)
+    w.put("v", np.arange(4, dtype=np.float32), global_shape=(4,),
+          offset=(0,), rank=1)
+    w.end_step()
+    w.close()
+    assert len(list((tmpdir_path / "p.bp4").glob("data.*"))) == 2
+
+
+def test_parallel_put_rank_validation(tmpdir_path):
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 4, EngineConfig(),
+                         n_writers=2)
+    w.begin_step(0)
+    with pytest.raises(ValueError, match="rank=4"):
+        w.put("v", np.zeros(4, np.float32), global_shape=(4,), offset=(0,),
+              rank=4)
+    w.put("v", np.zeros(4, np.float32), global_shape=(4,), offset=(0,),
+          rank=0)
+    w.end_step()
+    w.close()
+
+
+# -------------------------------------------------------- two-phase commit
+def test_crash_between_prepare_and_commit_drops_step(tmpdir_path):
+    """Shards sealed (phase 1) but no md.idx record (phase 2 never ran):
+    the step must be invisible to the reader — torn-shard/torn-commit
+    recovery is 'the commit record is the truth'."""
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 4, EngineConfig(),
+                         n_writers=2)
+    w.begin_step(0)
+    w.put("v", np.arange(8, dtype=np.float32), global_shape=(8,),
+          offset=(0,), rank=0)
+    w.end_step()
+    w._crash_after_prepare = True
+    w.begin_step(1)
+    w.put("v", np.full(8, 9, np.float32), global_shape=(8,), offset=(0,),
+          rank=0)
+    with pytest.raises(RuntimeError, match="simulated coordinator crash"):
+        w.end_step()
+    w._crash_after_prepare = False
+    w.close()
+    # step 1 was durably PREPARED on the shard...
+    assert [s for s, _ in iter_shard_records(tmpdir_path / "p.bp4", 0)] == \
+        [0, 1]
+    # ...but never committed: the reader drops it exactly like a torn step
+    r = BpReader(tmpdir_path / "p.bp4")
+    assert r.valid_steps() == [0]
+    np.testing.assert_array_equal(r.read_var(0, "v"),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_torn_shard_tail_is_dropped_on_replay(tmpdir_path):
+    """A shard torn mid-record (writer crash during prepare) replays to
+    exactly the sealed prefix — the recovery primitive."""
+    _write_series(ParallelBpWriter, tmpdir_path / "p.bp4", n_writers=2,
+                  n_ranks=4, steps=3)
+    sp = shard_path(tmpdir_path / "p.bp4", 1)
+    raw = sp.read_bytes()
+    sp.write_bytes(raw[:len(raw) - 7])        # tear the last record's tail
+    steps = [s for s, _ in iter_shard_records(tmpdir_path / "p.bp4", 1)]
+    assert steps == [0, 1]
+    # corrupt the SECOND record's payload: replay stops BEFORE it
+    from repro.core.parallel_engine import SHARD_HDR
+    _, ln0, _ = SHARD_HDR.unpack_from(raw, 0)
+    raw2 = bytearray(raw)
+    raw2[SHARD_HDR.size + ln0 + SHARD_HDR.size + 2] ^= 0xFF
+    sp.write_bytes(bytes(raw2))
+    assert [s for s, _ in iter_shard_records(tmpdir_path / "p.bp4", 1)] == [0]
+
+
+def test_worker_error_aborts_step_not_series(tmpdir_path):
+    """A worker-side failure (bad codec) aborts the step with the worker
+    traceback surfaced; nothing is committed and close() still tears the
+    plane down cleanly."""
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 2,
+                         EngineConfig(codec="no-such-codec"), n_writers=2)
+    w.begin_step(0)
+    w.put("v", np.arange(4, dtype=np.float32), global_shape=(4,),
+          offset=(0,), rank=0)
+    with pytest.raises(RuntimeError, match="unknown codec"):
+        w.end_step()
+    w.close()
+    assert BpReader(tmpdir_path / "p.bp4").valid_steps() == []
+    assert all(not p.is_alive() for p, _ in w._workers)
+
+
+def test_worker_shard_offset_survives_failed_step(tmpdir_path, monkeypatch):
+    """A step that fails AFTER the shard grew (e.g. fsync error) must not
+    desync the worker's record-offset accounting: the next successful
+    step's 'prepared' ack has to point at ITS OWN sealed record, or every
+    later commit on that worker aborts as a torn shard."""
+    import queue as q
+    import threading
+    import zlib as _zlib
+
+    from repro.core import aggregation
+    from repro.core.bp_engine import EngineConfig
+    from repro.core.parallel_engine import SHARD_HDR, _worker_main
+
+    fail_once = {"armed": True}
+    real_fsync = aggregation.SubfileSet.fsync_one
+
+    def flaky_fsync(self, agg_id):
+        if fail_once.pop("armed", None):
+            raise OSError("injected transient fsync failure")
+        return real_fsync(self, agg_id)
+
+    monkeypatch.setattr(aggregation.SubfileSet, "fsync_one", flaky_fsync)
+    task_q, result_q = q.Queue(), q.Queue()
+    t = threading.Thread(
+        target=_worker_main,
+        args=(0, str(tmpdir_path), 1,
+              EngineConfig(fsync_policy="step"), task_q, result_q),
+        daemon=True)
+    t.start()
+    assert result_q.get(timeout=10)[0] == "ready"
+    arr = np.arange(8, dtype=np.float32)
+    task_q.put(("step", 0, [("v", 0, (0,), arr)]))
+    tag, _, _, payload = result_q.get(timeout=10)
+    assert tag == "error" and "injected transient fsync" in payload
+    task_q.put(("step", 1, [("v", 0, (0,), arr * 2)]))
+    tag, _, mstep, info = result_q.get(timeout=10)
+    assert (tag, mstep) == ("prepared", 1)
+    task_q.put(("close", None, None))
+    assert result_q.get(timeout=10)[0] == "closed"
+    t.join(timeout=10)
+    # the ack must locate a crc-valid record FOR STEP 1 (the coordinator's
+    # phase-1 validation, done by hand here)
+    raw = (tmpdir_path / "md.0.shard").read_bytes()
+    rec = raw[info["shard_off"]:info["shard_off"] + info["shard_len"]]
+    rstep, ln, crc = SHARD_HDR.unpack_from(rec, 0)
+    blob = rec[SHARD_HDR.size:SHARD_HDR.size + ln]
+    assert rstep == 1 and (_zlib.crc32(blob) & 0xFFFFFFFF) == crc
+
+
+def test_fsync_step_policy_commits_each_step_durably(tmpdir_path):
+    """fsync_policy='step': every end_step returns with the commit record
+    (and the workers' subfile+shard fsyncs) on disk — a reader opened
+    mid-series sees the committed prefix."""
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 4,
+                         EngineConfig(fsync_policy="step"), n_writers=2)
+    for s in range(2):
+        w.begin_step(s)
+        w.put("v", np.full(8, s, np.float32), global_shape=(8,),
+              offset=(0,), rank=0)
+        w.end_step()
+        r = BpReader(tmpdir_path / "p.bp4")
+        assert r.valid_steps() == list(range(s + 1))
+    w.close()
+
+
+def test_profiling_has_two_phase_timings(tmpdir_path):
+    _write_series(ParallelBpWriter, tmpdir_path / "p.bp4", n_writers=4,
+                  steps=2)
+    doc = json.loads((tmpdir_path / "p.bp4" / "profiling.json").read_text())
+    assert doc["engine"] == "JBP(BP4-parallel)"
+    assert doc["writers"] == 4
+    for step in doc["steps"]:
+        assert step["prepare_s"] > 0 and step["commit_s"] >= 0
+        assert len(step["worker_s"]) >= 1
+
+
+# ------------------------------------------------------------------- wiring
+def test_series_parallel_io_roundtrip(tmpdir_path):
+    from repro.core.openpmd import Series
+    s = Series(tmpdir_path / "d.bp4", "w", n_ranks=4,
+               engine_config=EngineConfig(aggregators=2), parallel_io=2)
+    it = s.iterations[0]
+    rc = it.meshes["density"][""]
+    arr = np.linspace(0, 1, 64, dtype=np.float32)
+    rc.reset_dataset(arr.dtype, arr.shape)
+    for r in range(4):
+        rc.store_chunk(arr[r * 16:(r + 1) * 16], offset=(r * 16,), rank=r)
+    s.flush()
+    s.close()
+    r = BpReader(tmpdir_path / "d.bp4")
+    assert r.valid_steps() == [0]
+    np.testing.assert_array_equal(
+        r.read_var(0, "/data/0/meshes/density"), arr)
+
+
+def test_series_rejects_async_plus_parallel(tmpdir_path):
+    from repro.core.openpmd import Series
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Series(tmpdir_path / "d.bp4", "w", async_io=True, parallel_io=2)
+
+
+def test_checkpoint_parallel_io_roundtrip(tmpdir_path):
+    from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+    state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+             "b": np.ones(8, dtype=np.float32),
+             "step": np.int32(7)}
+    save_checkpoint(tmpdir_path, state, 7, n_io_ranks=4, parallel_io=2)
+    like = {k: np.zeros_like(v) for k, v in state.items()}
+    restored, step = restore_checkpoint(tmpdir_path, like)
+    assert step == 7
+    for k in state:
+        np.testing.assert_array_equal(restored[k], state[k])
+
+
+def test_pic_diagnostic_series_parallel_io(tmpdir_path):
+    import jax
+
+    from repro.pic.simulation import (PicConfig, init_sim,
+                                      open_diagnostic_series,
+                                      run_with_diagnostics)
+    cfg = PicConfig(n_cells=64, capacity=1 << 9, n_electrons=256,
+                    n_ions=256, n_neutrals=256)
+    state = init_sim(cfg, jax.random.PRNGKey(0))
+    series = open_diagnostic_series(tmpdir_path / "diag.bp4", n_io_ranks=4,
+                                    parallel_io=2)
+    run_with_diagnostics(state, cfg, series, n_chunks=2, steps_per_chunk=2,
+                         n_io_ranks=4)
+    series.close()
+    r = BpReader(tmpdir_path / "diag.bp4")
+    steps = r.valid_steps()
+    assert len(steps) == 2
+    dens = r.read_var(steps[0], "/data/%d/meshes/density_e" % steps[0])
+    assert dens.shape == (64,) and np.isfinite(dens).all()

@@ -35,6 +35,68 @@ def test_object_distribution(tmpdir_path):
     assert o0 == 300 and o1 == 212       # 3 stripes vs 2 stripes + 12
 
 
+def test_read_mode_striped_file(tmpdir_path):
+    """mode='r' opens an existing layout without truncating it: reads,
+    getstripe() and logical_size all work (the BpReader path used to skip
+    __init__ entirely and die in getstripe with AttributeError)."""
+    pool = OstPool(tmpdir_path, 4)
+    cfg = StripeConfig(stripe_count=3, stripe_size=512)
+    w = StripedFile(pool, "data.0", cfg)
+    payload = np.random.default_rng(1).bytes(5000)
+    w.write(payload)
+    w.fsync()
+    w.close()
+
+    r = StripedFile(pool, "data.0", cfg, mode="r")
+    assert r.logical_size == len(payload)
+    assert r.read(0, len(payload)) == payload
+    assert r.read(700, 1300) == payload[700:2000]
+    info = r.getstripe()                  # regression: no AttributeError
+    assert info["logical_size"] == len(payload)
+    assert info["lmm_stripe_count"] == 3
+    with pytest.raises(ValueError, match="not open for writing"):
+        r.write(b"nope")
+    r.close()
+
+
+def test_read_mode_caches_object_handles(tmpdir_path):
+    """Repeated reads must reuse per-OST handles, not reopen an object
+    file per segment."""
+    from repro.core.darshan import MONITOR
+    pool = OstPool(tmpdir_path, 2)
+    cfg = StripeConfig(stripe_count=2, stripe_size=128)
+    w = StripedFile(pool, "x", cfg)
+    w.write(bytes(range(256)) * 8)        # 2048 bytes -> 16 stripes
+    w.fsync()
+    w.close()
+    MONITOR.reset()
+    r = StripedFile(pool, "x", cfg, mode="r")
+    for off in (0, 256, 512, 1024):
+        r.read(off, 256)
+    opens = sum(c.get("POSIX_OPENS", 0)
+                for p, c in MONITOR.report()["files"].items() if ".obj" in p)
+    assert opens == 2, f"expected one open per OST, saw {opens}"
+    r.close()
+
+
+def test_parallel_ost_flush_overlaps_stragglers(tmpdir_path):
+    """One logical write touching K slow OSTs costs ~max(ost time), not the
+    sum — the per-OST flushers run concurrently."""
+    import time
+    delay = 0.08
+    pool = OstPool(tmpdir_path, 2, slow_osts={0: delay, 1: delay})
+    cfg = StripeConfig(stripe_count=2, stripe_size=100)
+    f = StripedFile(pool, "s", cfg)
+    t0 = time.perf_counter()
+    f.write(bytes(400))                   # 4 stripes -> 2 per OST
+    dt = time.perf_counter() - t0
+    f.fsync()
+    assert f.read(0, 400) == bytes(400)
+    f.close()
+    # sequential: 4 * delay = 0.32s; parallel: ~2 * delay = 0.16s
+    assert dt < 3.2 * delay, f"stripe flushes did not overlap ({dt:.3f}s)"
+
+
 @settings(max_examples=25, deadline=None)
 @given(stripe_count=st.integers(1, 4),
        stripe_size=st.integers(16, 512),
