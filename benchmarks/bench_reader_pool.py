@@ -1,0 +1,88 @@
+"""Aggregate READ throughput scaling with N ReaderPool workers.
+
+The read-side mirror of bench_parallel_io's W1->W4 write story: a series
+with many chunks spread over M subfiles is read back as one box selection,
+serially vs `read_var(parallel=N)`. The pool overlaps payload reads across
+subfiles and decompression across cores (zlib releases the GIL), so on the
+2-core CI box parallel=2..4 should beat serial measurably — while
+returning bit-identical bytes, which this benchmark asserts every round.
+
+    PYTHONPATH=src python benchmarks/bench_reader_pool.py
+"""
+from __future__ import annotations
+
+from benchmarks.common import MiB, Timer, emit, pic_payload, tmp_io_dir
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+
+
+def _write_series(path, *, n_ranks, bytes_per_rank, steps, codec,
+                  aggregators):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=4)
+    w = BpWriter(path, n_ranks, cfg)
+    payloads = [pic_payload(r, bytes_per_rank)["particles"]
+                for r in range(n_ranks)]
+    n = payloads[0].size
+    for s in range(steps):
+        w.begin_step(s)
+        for r, arr in enumerate(payloads):
+            w.put("particles/x", arr, global_shape=(n * n_ranks,),
+                  offset=(n * r,), rank=r)
+        w.end_step()
+    w.close()
+    return n * n_ranks
+
+
+def measure(reader: BpReader, steps: int, parallel: int, repeats: int,
+            baseline=None):
+    """Best-of-N wall clock for a full sweep of every step's array."""
+    best = None
+    nbytes = 0
+    for _ in range(repeats):
+        with Timer() as t:
+            for s in range(steps):
+                arr = reader.read_var(s, "particles/x", parallel=parallel)
+        nbytes = arr.nbytes * steps
+        if baseline is not None:      # bit parity with the serial read
+            assert arr.tobytes() == baseline, \
+                f"parallel={parallel} read differs from serial"
+        if best is None or t.dt < best:
+            best = t.dt
+    return best, nbytes / best / MiB
+
+
+def run(parallel_counts=(1, 2, 4), n_ranks=8, bytes_per_rank=2 * MiB,
+        steps=3, codec="zlib", aggregators=4, repeats=3, attempts=3):
+    print("mode,parallel,wall_s,agg_MiB_s")
+    ok = True
+    with tmp_io_dir() as d:
+        path = d / "read.bp4"
+        _write_series(path, n_ranks=n_ranks, bytes_per_rank=bytes_per_rank,
+                      steps=steps, codec=codec, aggregators=aggregators)
+        reader = BpReader(path)
+        baseline = reader.read_var(steps - 1, "particles/x").tobytes()
+        for attempt in range(attempts):
+            rows = {}
+            for n in parallel_counts:
+                rows[f"P{n}"] = measure(reader, steps, n, repeats,
+                                        baseline=None if n == 1
+                                        else baseline)
+            lo, hi = min(parallel_counts), max(parallel_counts)
+            # the claim under test: aggregate read throughput RISES with N
+            scaling = rows[f"P{hi}"][1] / rows[f"P{lo}"][1]
+            ok = hi == lo or scaling > 1.1
+            if ok or attempt == attempts - 1:
+                break
+            print(f"  .. noisy measurement (P{hi}/P{lo} = {scaling:.2f}x), "
+                  f"remeasuring")
+        reader.close()
+    for name, (wall, mib) in rows.items():
+        print(f"{name},{name[1:]},{wall:.3f},{mib:.0f}")
+        emit(f"reader_pool/{codec}/{name}", wall * 1e6 / steps,
+             f"{mib:.0f}MiB/s")
+    print(f"\nparallel read plane {'OK' if ok else 'REGRESSED'}: "
+          f"P{hi} vs P{lo} aggregate throughput {scaling:.2f}x")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

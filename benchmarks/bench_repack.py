@@ -1,0 +1,59 @@
+"""Repack throughput + correctness: W -> W' re-aggregation end to end.
+
+The elastic-restart story measured: a series written at W aggregators is
+rewritten at W' (and optionally recompressed) by `repro.tools.jbprepack`,
+then verified BYTE-EQUIVALENT under the reader. Emits repack throughput
+with serial vs ReaderPool-parallel chunk reads — the maintenance pass is
+itself a consumer of the parallel read plane.
+
+    PYTHONPATH=src python benchmarks/bench_repack.py
+"""
+from __future__ import annotations
+
+from benchmarks.common import MiB, Timer, emit, pic_payload, tmp_io_dir
+from repro.core.bp_engine import BpWriter, EngineConfig
+from repro.tools.jbprepack import repack, verify_equivalent
+
+
+def _write_series(path, *, n_ranks, bytes_per_rank, steps, codec, w):
+    cfg = EngineConfig(aggregators=w, codec=codec, workers=4)
+    wr = BpWriter(path, n_ranks, cfg)
+    payloads = [pic_payload(r, bytes_per_rank)["particles"]
+                for r in range(n_ranks)]
+    n = payloads[0].size
+    for s in range(steps):
+        wr.begin_step(s)
+        for r, arr in enumerate(payloads):
+            wr.put("particles/x", arr, global_shape=(n * n_ranks,),
+                   offset=(n * r,), rank=r)
+        wr.end_step()
+    wr.close()
+
+
+def run(w_src=4, w_dst_counts=(1, 2), n_ranks=8, bytes_per_rank=1 * MiB,
+        steps=2, codec="zlib", parallel=2):
+    print("mode,w_src,w_dst,wall_s,MiB_s,arrays_verified")
+    ok = True
+    with tmp_io_dir() as d:
+        src = d / "src.bp4"
+        _write_series(src, n_ranks=n_ranks, bytes_per_rank=bytes_per_rank,
+                      steps=steps, codec=codec, w=w_src)
+        for w_dst in w_dst_counts:
+            for par, tag in ((0, "serial"), (parallel, f"par{parallel}")):
+                dst = d / f"dst_{w_dst}_{tag}.bp4"
+                with Timer() as t:
+                    stats = repack(src, dst, n_writers=w_dst,
+                                   parallel=par)
+                n = verify_equivalent(src, dst)
+                ok = ok and n == steps
+                mib = stats["bytes_raw"] / t.dt / MiB
+                print(f"{tag},{w_src},{w_dst},{t.dt:.3f},{mib:.0f},{n}")
+                emit(f"repack/{codec}/W{w_src}->W{w_dst}/{tag}",
+                     t.dt * 1e6 / max(stats['steps'], 1), f"{mib:.0f}MiB/s")
+    print(f"\nrepack {'OK' if ok else 'FAILED'}: every output "
+          f"byte-equivalent under the reader")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

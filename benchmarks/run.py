@@ -26,7 +26,8 @@ def main(argv=None) -> None:
                             bench_compression, bench_darshan_costs,
                             bench_insitu, bench_ior, bench_kernels,
                             bench_openpmd_io, bench_original_io,
-                            bench_parallel_io, bench_perf_io, bench_restart,
+                            bench_parallel_io, bench_perf_io,
+                            bench_reader_pool, bench_repack, bench_restart,
                             bench_roofline, bench_striping)
 
     quick = args.quick
@@ -54,6 +55,14 @@ def main(argv=None) -> None:
             writer_counts=(1, 2) if quick else (1, 2, 4),
             bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,
             steps=3 if quick else 4, repeats=2 if quick else 3)),
+        ("reader_pool", lambda: bench_reader_pool.run(
+            parallel_counts=(1, 2) if quick else (1, 2, 4),
+            bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,
+            steps=2 if quick else 3, repeats=2 if quick else 3)),
+        ("repack", lambda: bench_repack.run(
+            w_dst_counts=(1,) if quick else (1, 2),
+            bytes_per_rank=512 * 1024 if quick else 1 * 1024**2,
+            steps=2)),
         ("insitu", lambda: bench_insitu.run(
             n_steps=40 if quick else 200, n_ranks=4 if quick else 8,
             n_cells=1024 if quick else 4096)),

@@ -67,7 +67,8 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
                     engine_config: EngineConfig = EngineConfig(),
                     extra_attrs: Optional[dict] = None,
                     async_io: bool = False,
-                    parallel_io: int = 0) -> pathlib.Path:
+                    parallel_io: int = 0,
+                    writer_plane=None) -> pathlib.Path:
     """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename).
 
     With `async_io` the write goes through the AsyncBpWriter pipeline;
@@ -75,7 +76,10 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
     with a BLOCKING seal — so by the time the .tmp is renamed the step's
     md.idx record is durable either way. `parallel_io=W` instead writes
     through W real writer processes (two-phase commit; the md.idx seal and
-    every subfile/shard fsync precede the rename)."""
+    every subfile/shard fsync precede the rename). `writer_plane` (a
+    `repro.core.parallel_engine.WriterPlane`) supplies ALREADY-RUNNING
+    writer processes for the parallel path — the spawn cost is the
+    plane owner's, paid once per run instead of once per save."""
     directory = pathlib.Path(str(directory))
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}.bp4"
@@ -86,9 +90,11 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
     flat = flatten_state(state)
     import dataclasses as _dc
     cfg = _dc.replace(engine_config, fsync_policy="step")
-    if parallel_io:
+    if parallel_io or writer_plane is not None:
         from repro.core.parallel_engine import ParallelBpWriter
-        w = ParallelBpWriter(tmp, n_io_ranks, cfg, n_writers=parallel_io)
+        w = ParallelBpWriter(tmp, n_io_ranks, cfg,
+                             n_writers=parallel_io or None,
+                             plane=writer_plane)
     elif async_io:
         from repro.core.async_engine import AsyncBpWriter
         w = AsyncBpWriter(tmp, n_io_ranks, cfg)
@@ -135,10 +141,9 @@ def list_checkpoints(directory) -> list[int]:
     out = []
     for p in sorted(directory.glob("step_*.bp4")):
         try:
-            reader = BpReader(p)
-            steps = reader.valid_steps()
-            if steps:
-                out.append(int(p.name[5:13]))
+            with BpReader(p) as reader:
+                if reader.valid_steps():
+                    out.append(int(p.name[5:13]))
         except Exception:       # noqa: BLE001 — corrupt checkpoint: skip
             continue
     return sorted(out)
@@ -148,27 +153,30 @@ def checkpoint_path(directory, step: int) -> pathlib.Path:
     return pathlib.Path(str(directory)) / f"step_{step:08d}.bp4"
 
 
-def restore_checkpoint(directory, like, step: Optional[int] = None):
+def restore_checkpoint(directory, like, step: Optional[int] = None,
+                       *, parallel: int = 0):
     """Restore into the structure of `like` (pytree of arrays or
-    ShapeDtypeStructs). Full-array read (single-host path)."""
+    ShapeDtypeStructs). Full-array read (single-host path). `parallel=N`
+    fans multi-chunk leaf reads over a ReaderPool; the context manager
+    guarantees the reader (pool + subfile handles) is released even when
+    a leaf is missing or corrupt mid-restore."""
     directory = pathlib.Path(str(directory))
     steps = list_checkpoints(directory)
     if not steps:
         raise FileNotFoundError(f"no valid checkpoints under {directory}")
     step = step if step is not None else steps[-1]
-    reader = BpReader(checkpoint_path(directory, step))
     flat = flatten_state(like)
     out = {}
-    try:
+    with BpReader(checkpoint_path(directory, step),
+                  parallel=parallel) as reader:
         for name, leaf in flat.items():
             arr = reader.read_var(step, f"state/{name}")
             out[name] = _from_storage(arr, leaf.dtype).reshape(leaf.shape)
-    finally:
-        reader.close()
     return unflatten_like(like, out), step
 
 
-def restore_sharded(directory, like, shardings, step: Optional[int] = None):
+def restore_sharded(directory, like, shardings, step: Optional[int] = None,
+                    *, parallel: int = 0):
     """Elastic restore: `like` + `shardings` describe the NEW mesh layout;
     every device shard reads exactly its box from the chunk table."""
     directory = pathlib.Path(str(directory))
@@ -176,11 +184,11 @@ def restore_sharded(directory, like, shardings, step: Optional[int] = None):
     if not steps:
         raise FileNotFoundError(f"no valid checkpoints under {directory}")
     step = step if step is not None else steps[-1]
-    reader = BpReader(checkpoint_path(directory, step))
     flat_like = flatten_state(like)
     flat_sh = flatten_state(shardings)
     out = {}
-    try:
+    with BpReader(checkpoint_path(directory, step),
+                  parallel=parallel) as reader:
         for name, leaf in flat_like.items():
             sh = flat_sh[name]
             var = f"state/{name}"
@@ -198,8 +206,6 @@ def restore_sharded(directory, like, shardings, step: Optional[int] = None):
                 out[name] = jax.device_put(arr, sh)
             else:
                 out[name] = jax.make_array_from_callback(leaf.shape, sh, fetch)
-    finally:
-        reader.close()
     return unflatten_like(like, out), step
 
 

@@ -43,7 +43,10 @@ class CheckpointManager:
         # routes the write through W real writer processes instead
         # (repro.core.parallel_engine) — compression and subfile appends
         # leave the training process entirely; takes precedence over
-        # engine_async.
+        # engine_async. The W processes are a PERSISTENT WriterPlane:
+        # spawned lazily on the first save and retargeted per checkpoint,
+        # so the spawn cost is paid once per run, not once per `every`
+        # steps; `close()` tears the plane down.
         self.dir = pathlib.Path(str(directory))
         self.dir.mkdir(parents=True, exist_ok=True)
         self.every = every
@@ -53,6 +56,7 @@ class CheckpointManager:
         self.async_write = async_write
         self.engine_async = engine_async
         self.parallel_io = int(parallel_io)
+        self._plane = None                       # lazy persistent write plane
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self.saved_steps: list[int] = []
@@ -81,6 +85,19 @@ class CheckpointManager:
         w = self.stats["write_s"]
         return max(0.0, 1.0 - self.stats["blocked_s"] / w) if w > 0 else 0.0
 
+    def _writer_plane(self):
+        """The persistent parallel write plane, spawned on first use and
+        respawned if its workers died (e.g. a prior save crashed them)."""
+        if not self.parallel_io:
+            return None
+        if self._plane is not None and not self._plane.alive():
+            self._plane.shutdown()
+            self._plane = None
+        if self._plane is None:
+            from repro.core.parallel_engine import WriterPlane
+            self._plane = WriterPlane(self.parallel_io)
+        return self._plane
+
     def save(self, state, step: int, *, force: bool = False):
         if not force and not self.should_save(step):
             return False
@@ -96,7 +113,8 @@ class CheckpointManager:
                                    engine_config=self.engine_config,
                                    async_io=(self.engine_async
                                              and not self.parallel_io),
-                                   parallel_io=self.parallel_io)
+                                   parallel_io=self.parallel_io,
+                                   writer_plane=self._writer_plane())
                 self.stats["write_s"] += time.perf_counter() - t0
                 self.saved_steps.append(step)
                 # durability barrier passed (sealed md.idx + rename above):
@@ -122,17 +140,36 @@ class CheckpointManager:
         for tmp in self.dir.glob("*.bp4.tmp"):       # torn writes
             shutil.rmtree(tmp, ignore_errors=True)
 
+    def close(self):
+        """Drain the in-flight save and tear down the persistent writer
+        plane (if any). The manager stays usable — a later save respawns
+        the plane lazily."""
+        try:
+            self.wait()
+        finally:
+            plane, self._plane = self._plane, None
+            if plane is not None:
+                plane.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
     # -------------------------------------------------------------- restore
-    def restore_latest(self, like, shardings=None):
-        """Newest valid checkpoint, or None if there is none."""
+    def restore_latest(self, like, shardings=None, *, parallel: int = 0):
+        """Newest valid checkpoint, or None if there is none. `parallel=N`
+        fans each leaf's chunk reads over a ReaderPool."""
         self.wait()
         steps = CK.list_checkpoints(self.dir)
         for step in reversed(steps):
             try:
                 if shardings is not None:
                     return CK.restore_sharded(self.dir, like, shardings,
-                                              step=step)
-                return CK.restore_checkpoint(self.dir, like, step=step)
+                                              step=step, parallel=parallel)
+                return CK.restore_checkpoint(self.dir, like, step=step,
+                                             parallel=parallel)
             except Exception:                        # noqa: BLE001
                 continue
         return None

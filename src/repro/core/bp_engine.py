@@ -51,6 +51,7 @@ from repro.core import compression as C
 from repro.core.aggregation import (AggregatorConfig, SubfileSet, WriterPool,
                                     aggregator_of)
 from repro.core.darshan import open_file
+from repro.core.reader_pool import ReaderPool
 from repro.core.striping import OstPool, StripeConfig, StripedFile
 
 IDX_RECORD = struct.Struct("<QQQIIQQQ")   # step, md_off, md_len, crc, flags, t_ns, reserved x2
@@ -214,6 +215,13 @@ class BpWriter:
     def set_attribute(self, name: str, value):
         self._attrs[name] = value
 
+    def replace_attributes(self, attrs: dict):
+        """Replace the attribute set wholesale. Attributes normally
+        ACCUMULATE across steps (each step's md.0 record stores the current
+        set); a replaying tool (jbprepack) needs per-step exactness instead
+        — what the source step recorded, nothing more."""
+        self._attrs = dict(attrs)
+
     def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
             offset: tuple, rank: int):
         """Register one rank's chunk of variable `name` for this step."""
@@ -356,16 +364,26 @@ class BpReader:
         `read_var()` actually needs payload bytes,
       * `read_var` prunes chunks with the same `_box_intersection`
         predicate `chunks_in_box` uses, so an empty-intersection selection
-        performs zero payload I/O.
+        performs zero payload I/O,
+      * `read_var(parallel=N)` fans a multi-chunk read plan out over a
+        `ReaderPool` (N worker threads, per-aggregator handle affinity) —
+        payload reads hit the M subfiles concurrently and decompression
+        overlaps across cores (zlib/bz2 release the GIL). Results are
+        byte-identical to the serial path; `parallel` passed to the
+        constructor sets the default for every read.
     """
 
-    def __init__(self, path):
+    def __init__(self, path, *, parallel: int = 0):
         self.path = pathlib.Path(str(path))
+        self.default_parallel = int(parallel)
         self._blobs: dict[int, bytes] = {}        # step -> validated md.0 blob
         self._meta: dict[int, dict] = {}          # step -> parsed record cache
         self.idx_records: dict[int, dict] = {}    # step -> md.idx fields
         self._data_handles: dict[int, Any] = {}   # agg -> cached payload handle
         self._io_lock = threading.Lock()          # seek+read must be atomic
+        self._pool: Optional[ReaderPool] = None   # lazy parallel-read plane
+        self._tls = threading.local()             # per-worker handle cache
+        self._side_handles: list = []             # every per-thread handle
         self._load_index()
 
     def _load_index(self):
@@ -545,6 +563,13 @@ class BpReader:
         f = self._data_handles.get(agg)
         if f is not None:
             return f
+        f = self._open_data(agg)
+        self._data_handles[agg] = f
+        return f
+
+    def _open_data(self, agg: int):
+        """Open a fresh payload handle for aggregator `agg` (plain subfile
+        or striped layout)."""
         plain = self.path / f"data.{agg}"
         if plain.exists():
             f = open_file(plain, "rb")
@@ -565,7 +590,6 @@ class BpReader:
                             StripeConfig(cfgd["stripe_count"],
                                          cfgd["stripe_size"]),
                             rank=0, mode="r")
-        self._data_handles[agg] = f
         return f
 
     def _read_payload(self, agg: int, foff: int, nbytes: int) -> bytes:
@@ -576,10 +600,46 @@ class BpReader:
             f.seek(foff)
             return f.read(nbytes)
 
+    def _read_payload_local(self, agg: int, foff: int, nbytes: int) -> bytes:
+        """Payload read through a PER-THREAD handle — the ReaderPool path.
+        No lock is taken around seek+read: every (worker thread, aggregator)
+        pair owns its handle outright, which is the handle-affinity contract
+        (affinity routing makes the common case one handle per subfile)."""
+        cache = getattr(self._tls, "handles", None)
+        if cache is None:
+            cache = self._tls.handles = {}
+        f = cache.get(agg)
+        if f is None:
+            f = cache[agg] = self._open_data(agg)
+            with self._io_lock:
+                self._side_handles.append(f)
+        if isinstance(f, StripedFile):
+            return f.read(foff, nbytes)
+        f.seek(foff)
+        return f.read(nbytes)
+
+    def _get_pool(self, n: int) -> ReaderPool:
+        """Lazily create (or grow, in place) the parallel-read plane.
+        Creation is locked and growth never recreates the pool, so
+        concurrent read_var callers share one plane safely."""
+        with self._io_lock:
+            if self._pool is None:
+                self._pool = ReaderPool(n)
+            elif self._pool.n_workers < n:
+                self._pool.ensure(n)
+            return self._pool
+
     def close(self):
-        """Release cached payload handles (metadata stays queryable)."""
+        """Release the reader pool and every cached payload handle
+        (metadata stays queryable; a later read reopens lazily)."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown()
+        with self._io_lock:
+            side, self._side_handles = self._side_handles, []
+        self._tls = threading.local()
         handles, self._data_handles = self._data_handles, {}
-        for f in handles.values():
+        for f in list(handles.values()) + side:
             f.close()
 
     def __enter__(self):
@@ -588,26 +648,54 @@ class BpReader:
     def __exit__(self, *a):
         self.close()
 
+    def _scatter_chunk(self, out: np.ndarray, dtype, sel_off: tuple,
+                       ch: ChunkMeta, box, local: bool):
+        """Read one chunk's payload, decompress, scatter into `out`. The
+        unit of work of both read paths; `local=True` uses the per-thread
+        handle (ReaderPool workers), else the shared locked handle."""
+        lo, hi = box
+        read = self._read_payload_local if local else self._read_payload
+        payload = read(ch.agg, ch.file_offset, ch.nbytes)
+        arr = C.payload_to_array(payload, dtype, ch.extent)
+        src = tuple(slice(l - o, h - o)
+                    for l, o, h in zip(lo, ch.offset, hi))
+        dst = tuple(slice(l - o, h - o)
+                    for l, o, h in zip(lo, sel_off, hi))
+        out[dst] = arr[src]
+
     def read_var(self, step: int, name: str,
                  offset: Optional[tuple] = None,
-                 extent: Optional[tuple] = None) -> np.ndarray:
-        """Assemble a box selection (default: the full global array)."""
+                 extent: Optional[tuple] = None, *,
+                 parallel: Optional[int] = None) -> np.ndarray:
+        """Assemble a box selection (default: the full global array).
+
+        `parallel=N` (default: the constructor's `parallel`) fans the
+        chunk plan out over N ReaderPool workers keyed by aggregator id —
+        bytes returned are identical to the serial path; chunks of a step
+        cover disjoint boxes, so the scatters never race."""
+        n = self.default_parallel if parallel is None else int(parallel)
         info = self.var_info(step, name)
         dtype = np.dtype(info["dtype"])
         gshape = tuple(info["shape"])
         sel_off = tuple(offset) if offset is not None else (0,) * len(gshape)
         sel_ext = tuple(extent) if extent is not None else gshape
         out = np.zeros(sel_ext, dtype=dtype)
+        plan = []
         for ch in self.iter_chunks(step, name):
             box = _box_intersection(ch.offset, ch.extent, sel_off, sel_ext)
-            if box is None:
-                continue
-            lo, hi = box
-            payload = self._read_payload(ch.agg, ch.file_offset, ch.nbytes)
-            arr = C.payload_to_array(payload, dtype, ch.extent)
-            src = tuple(slice(l - o, h - o)
-                        for l, o, h in zip(lo, ch.offset, hi))
-            dst = tuple(slice(l - o, h - o)
-                        for l, o, h in zip(lo, sel_off, hi))
-            out[dst] = arr[src]
+            if box is not None:
+                plan.append((ch, box))
+        if n > 1 and len(plan) > 1:
+            pool = self._get_pool(min(n, len(plan)))
+            # per-call batch: concurrent read_var callers on one reader
+            # (e.g. restore_sharded fetchers) each wait on — and receive
+            # the errors of — exactly their own chunk tasks
+            batch = pool.batch()
+            for ch, box in plan:
+                pool.submit(ch.agg, self._scatter_chunk, out, dtype, sel_off,
+                            ch, box, True, batch=batch)
+            pool.drain_batch(batch)
+        else:
+            for ch, box in plan:
+                self._scatter_chunk(out, dtype, sel_off, ch, box, False)
         return out

@@ -72,6 +72,39 @@ class DarshanMonitor:
                 tbin = int((time.perf_counter() - self._t0) / self.heatmap_bin_s)
                 self._heatmap[(rank, tbin)] += nbytes
 
+    # -------------------------------------------------------- snapshot / merge
+    def snapshot(self) -> dict:
+        """Plain-dict (picklable) dump of every raw counter — what a writer/
+        reader WORKER PROCESS ships back to the coordinator on its ack, so
+        `parser_dump` in the parent covers the whole I/O plane, not just the
+        coordinator's own file ops."""
+        with self._lock:
+            return {
+                "per_rank": {r: dict(c) for r, c in self._per_rank.items()},
+                "per_file": {p: dict(c) for p, c in self._per_file.items()},
+                "size_hist": dict(self._size_hist),
+                "heatmap": [[r, b, v] for (r, b), v in self._heatmap.items()],
+            }
+
+    def merge(self, snap: dict):
+        """Fold a `snapshot()` from another process into this monitor
+        (additive on every counter)."""
+        if not snap:
+            return
+        with self._lock:
+            for r, counters in snap.get("per_rank", {}).items():
+                dst = self._per_rank[r]
+                for k, v in counters.items():
+                    dst[k] += v
+            for p, counters in snap.get("per_file", {}).items():
+                dst = self._per_file[p]
+                for k, v in counters.items():
+                    dst[k] += v
+            for k, v in snap.get("size_hist", {}).items():
+                self._size_hist[k] += v
+            for r, b, v in snap.get("heatmap", []):
+                self._heatmap[(r, b)] += v
+
     # ------------------------------------------------------------------ report
     def report(self, n_procs: Optional[int] = None) -> dict:
         """n_procs: logical process count to normalize by (aggregated writes

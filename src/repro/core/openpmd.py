@@ -172,11 +172,15 @@ class Series:
     def __init__(self, path, mode: str = "w", *, n_ranks: int = 1,
                  engine_config: EngineConfig = EngineConfig(),
                  meta: Optional[dict] = None, async_io: bool = False,
-                 queue_depth: int = 2, parallel_io: int = 0):
+                 queue_depth: int = 2, parallel_io: int = 0,
+                 parallel_read: int = 0):
         self.path = pathlib.Path(str(path))
         self.mode = mode
         self.n_ranks = n_ranks
         self.engine_config = engine_config
+        # read-side mirror of parallel_io: load_chunk/read_var fan
+        # multi-chunk reads over a ReaderPool of this many workers
+        self.parallel_read = int(parallel_read)
         if parallel_io and async_io:
             raise ValueError(
                 "async_io and parallel_io are mutually exclusive engines "
@@ -286,7 +290,8 @@ class Series:
     # ------------------------------------------------------------------ read
     def _reader(self) -> BpReader:
         if self._reader_obj is None:
-            self._reader_obj = BpReader(self.path)
+            self._reader_obj = BpReader(self.path,
+                                        parallel=self.parallel_read)
         return self._reader_obj
 
     def read_iterations(self) -> list[int]:

@@ -44,6 +44,14 @@ Shard record format (md.<w>.shard, append-only log):
 the recovery primitive for crashed writers. Note a shard may contain
 sealed records for steps that were never committed (prepare succeeded,
 commit did not); md.idx is always the commit truth.
+
+Persistent plane: a `WriterPlane` spawns W workers ONCE and keeps them
+idle between series; `ParallelBpWriter(..., plane=plane)` retargets them
+("open") and releases them ("finish") per series, so periodic checkpoint
+writes stop paying W process spawns per save (`CheckpointManager` holds
+one plane for the whole run). On "finished"/"closed" every worker ships
+its own Darshan `MONITOR.snapshot()` back on the ack and the coordinator
+merges it — `parser_dump` in the parent covers the whole write plane.
 """
 from __future__ import annotations
 
@@ -93,39 +101,96 @@ def iter_shard_records(path, w: int):
 
 
 # --------------------------------------------------------------------- worker
-def _worker_main(w: int, path_str: str, n_writers: int, cfg: EngineConfig,
-                 task_q, result_q):
-    """One writer process: owns data.<w> + md.<w>.shard for its lifetime.
+def _open_worker_files(path: pathlib.Path, w: int, n_writers: int,
+                       cfg: EngineConfig):
+    """Open worker `w`'s subfile + metadata shard for one series."""
+    ost_pool = (OstPool(path, cfg.n_osts)
+                if cfg.stripe is not None else None)
+    subfiles = SubfileSet(path, n_writers, stripe=cfg.stripe,
+                          ost_pool=ost_pool, owned=(w,))
+    shard = open_file(shard_path(path, w), "wb", rank=w)
+    return subfiles, shard
+
+
+def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
+    """One writer process: owns data.<w> + md.<w>.shard while a series is
+    open. With `path_str=None` the worker starts IDLE (a `WriterPlane`
+    member) and is retargeted per series via "open"/"finish" — the process
+    (spawn cost, imports, page cache) persists across series.
 
     Protocol (every message is (tag, w, step, payload)):
-      in:  ("step", step, items)  items = [(name, rank, offset, array), ...]
-           ("close", None, None)
-      out: ("ready", w, None, None)           files open, accepting steps
+      in:  ("open", None, (path, n_writers, cfg))  retarget at a new series
+           ("step", step, items)  items = [(name, rank, offset, array), ...]
+           ("finish", None, None)  fsync + close files; worker stays alive
+           ("close", None, None)   close files (if open) and exit
+      out: ("ready", w, None, None)           files open / idle, accepting
            ("prepared", w, step, info)        payload + shard sealed on disk
            ("error", w, step, traceback_str)  step failed; worker stays alive
-           ("closed", w, None, None)          files fsynced + closed
+           ("finished", w, None, darshan)     files closed; darshan snapshot
+           ("closed", w, None, darshan)       exiting; darshan snapshot
+
+    The darshan payload on "finished"/"closed" is the worker's own
+    `MONITOR.snapshot()` (reset after shipping, so a persistent worker
+    ships per-series deltas); the coordinator merges it so `parser_dump`
+    covers the whole write plane.
     """
-    path = pathlib.Path(path_str)
-    try:
-        ost_pool = (OstPool(path, cfg.n_osts)
-                    if cfg.stripe is not None else None)
-        subfiles = SubfileSet(path, n_writers, stripe=cfg.stripe,
-                              ost_pool=ost_pool, owned=(w,))
-        shard = open_file(shard_path(path, w), "wb", rank=w)
-    except BaseException:                       # noqa: BLE001
-        result_q.put(("error", w, None, traceback.format_exc()))
-        return
+    from repro.core.darshan import MONITOR
+
+    subfiles = shard = None
+
+    def _teardown():
+        nonlocal subfiles, shard
+        if subfiles is not None:
+            subfiles.fsync_close()
+            shard.fsync()
+            shard.close()
+            subfiles = shard = None
+
+    if path_str is not None:
+        try:
+            subfiles, shard = _open_worker_files(
+                pathlib.Path(path_str), w, n_writers, cfg)
+        except BaseException:                   # noqa: BLE001
+            result_q.put(("error", w, None, traceback.format_exc()))
+            return
     result_q.put(("ready", w, None, None))
     while True:
         msg = task_q.get()
         tag = msg[0]
+        if tag == "open":
+            try:
+                _teardown()                     # stale series, if any
+                o_path, o_n, o_cfg = msg[2]
+                n_writers, cfg = o_n, o_cfg
+                subfiles, shard = _open_worker_files(
+                    pathlib.Path(o_path), w, n_writers, cfg)
+            except BaseException:               # noqa: BLE001
+                result_q.put(("error", w, None, traceback.format_exc()))
+                continue                        # plane stays usable
+            result_q.put(("ready", w, None, None))
+            continue
+        if tag == "finish":
+            try:
+                _teardown()
+            except BaseException:               # noqa: BLE001
+                result_q.put(("error", w, None, traceback.format_exc()))
+                continue
+            snap = MONITOR.snapshot()
+            MONITOR.reset()
+            result_q.put(("finished", w, None, snap))
+            continue
         if tag == "close":
-            subfiles.fsync_close()
-            shard.fsync()
-            shard.close()
-            result_q.put(("closed", w, None, None))
+            try:
+                _teardown()
+            except BaseException:               # noqa: BLE001
+                pass                            # exiting anyway
+            result_q.put(("closed", w, None, MONITOR.snapshot()))
             return
         _, step, items = msg
+        if subfiles is None:
+            result_q.put(("error", w, step,
+                          "worker received a step with no open series"))
+            continue
         try:
             t0 = time.perf_counter()
             tcomp = 0.0
@@ -171,6 +236,110 @@ def _worker_main(w: int, path_str: str, n_writers: int, cfg: EngineConfig,
 
 
 # ---------------------------------------------------------------- coordinator
+def collect_acks(workers, result_q, kind: str, expect, *,
+                 timeout: float, step: Optional[int] = None) -> dict:
+    """Wait for one `kind` ack per worker in `expect`; raise on worker
+    errors or deaths. Acks for other steps (stale messages from an
+    aborted step) are ignored. Shared by the per-series coordinator and
+    the persistent WriterPlane."""
+    pending = set(expect)
+    got: dict[int, Any] = {}
+    errors: list[tuple[int, str]] = []
+    deadline = time.monotonic() + timeout
+    while pending:
+        try:
+            tag, wid, mstep, payload = result_q.get(timeout=1.0)
+        except _queue.Empty:
+            dead = [i for i in pending if not workers[i][0].is_alive()]
+            if dead:
+                raise RuntimeError(
+                    f"writer process(es) {dead} died before acking "
+                    f"{kind!r} — step aborted (not committed)")
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"timed out after {timeout}s waiting for "
+                    f"{kind!r} from writer(s) {sorted(pending)}")
+            continue
+        if tag == "error":
+            if step is not None and mstep is not None and mstep != step:
+                continue           # stale error from an already-aborted step
+            errors.append((wid, payload))
+            pending.discard(wid)
+        elif tag == kind and (step is None or mstep == step):
+            got[wid] = payload
+            pending.discard(wid)
+        # anything else: stale ack from an aborted step — drop it
+    if errors:
+        detail = "\n".join(f"--- writer {i} ---\n{tb}" for i, tb in errors)
+        raise RuntimeError(
+            f"parallel write failed on writer(s) "
+            f"{[i for i, _ in errors]}:\n{detail}")
+    return got
+
+
+class WriterPlane:
+    """W persistent writer processes, reusable across series.
+
+    `ParallelBpWriter(..., plane=plane)` retargets the plane's workers at
+    its series ("open") and releases them on close ("finish") WITHOUT
+    tearing the processes down — the spawn/import cost is paid once per
+    plane, not once per series. This is what makes periodic parallel
+    checkpoints cheap: `CheckpointManager` keeps one plane alive for the
+    whole run instead of spawning W processes every `every` steps.
+    """
+
+    def __init__(self, n_writers: int, *, ack_timeout: float = 300.0):
+        self.m = max(1, int(n_writers))
+        self.ack_timeout = ack_timeout
+        self._shut = False
+        self.workers, self.result_q = spawn_io_workers(
+            self.m, _worker_main,
+            lambda i, tq, rq: (i, None, self.m, None, tq, rq))
+        try:       # idle-ready handshake: every process is up and listening
+            collect_acks(self.workers, self.result_q, "ready", range(self.m),
+                         timeout=self.ack_timeout)
+        except BaseException:
+            self.shutdown(_collect=False)
+            raise
+
+    def pids(self) -> list[int]:
+        return [p.pid for p, _ in self.workers]
+
+    def alive(self) -> bool:
+        return not self._shut and all(p.is_alive() for p, _ in self.workers)
+
+    def shutdown(self, _collect: bool = True):
+        """Exit every worker; merge their Darshan counters into this
+        process's MONITOR (idempotent)."""
+        if self._shut:
+            return
+        self._shut = True
+        from repro.core.darshan import MONITOR
+        for p, tq in self.workers:
+            if p.is_alive():
+                tq.put(("close", None, None))
+        if _collect:
+            try:
+                got = collect_acks(
+                    self.workers, self.result_q, "closed",
+                    [i for i, (p, _) in enumerate(self.workers)
+                     if p.is_alive()], timeout=self.ack_timeout)
+                for snap in got.values():
+                    MONITOR.merge(snap)
+            except BaseException:               # noqa: BLE001
+                pass                            # best effort on teardown
+        for p, _ in self.workers:
+            p.join(timeout=10.0)
+            if p.is_alive():
+                p.terminate()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.shutdown()
+
+
 class ParallelBpWriter:
     """BpWriter-protocol writer backed by W real writer processes.
 
@@ -182,14 +351,18 @@ class ParallelBpWriter:
     """
 
     def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig(),
-                 *, n_writers: Optional[int] = None, ack_timeout: float = 300.0):
+                 *, n_writers: Optional[int] = None, ack_timeout: float = 300.0,
+                 plane: Optional[WriterPlane] = None):
         self.path = pathlib.Path(str(path))
         self.path.mkdir(parents=True, exist_ok=True)
         self.cfg = cfg
         self.n_ranks = n_ranks
         w = n_writers if n_writers is not None else cfg.aggregators
         self.m = min(max(1, int(w)), max(n_ranks, 1))
+        if plane is not None:
+            self.m = min(self.m, plane.m)
         self.ack_timeout = ack_timeout
+        self._plane = plane
         if cfg.stripe is not None:
             OstPool(self.path, cfg.n_osts)      # create ost dirs up front
             for i in range(self.m):
@@ -206,20 +379,30 @@ class ParallelBpWriter:
         self._closed = False
         self._crash_after_prepare = False       # test hook: torn-commit sim
         try:
-            self._workers, self._result_q = spawn_io_workers(
-                self.m, _worker_main,
-                lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq))
-            self._collect("ready", range(self.m))   # spawn failures surface here
+            if plane is not None:
+                # retarget the persistent plane's first m workers at this
+                # series; spawn cost is NOT paid here
+                self._workers, self._result_q = plane.workers, plane.result_q
+                for wid in range(self.m):
+                    self._workers[wid][1].put(
+                        ("open", None, (str(self.path), self.m, cfg)))
+            else:
+                self._workers, self._result_q = spawn_io_workers(
+                    self.m, _worker_main,
+                    lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq))
+            self._collect("ready", range(self.m))   # spawn/open failures here
         except BaseException:
             # a failed bring-up must not leak the md handles OR the
             # workers that DID come up (they would block on task_q.get
-            # holding their subfile/shard fds until parent exit)
+            # holding their subfile/shard fds until parent exit); a
+            # borrowed plane is left alive — its workers stay idle-usable
             self._md.close()
             self._idx.close()
-            for p, _ in getattr(self, "_workers", []):
-                if p.is_alive():
-                    p.terminate()
-                p.join(timeout=2.0)
+            if plane is None:
+                for p, _ in getattr(self, "_workers", []):
+                    if p.is_alive():
+                        p.terminate()
+                    p.join(timeout=2.0)
             raise
 
     # ------------------------------------------------------------------ step
@@ -245,44 +428,8 @@ class ParallelBpWriter:
 
     # ----------------------------------------------------------- ack plumbing
     def _collect(self, kind: str, expect, step: Optional[int] = None) -> dict:
-        """Wait for one `kind` ack per worker in `expect`; raise on worker
-        errors or deaths. Acks for other steps (stale messages from an
-        aborted step) are ignored."""
-        pending = set(expect)
-        got: dict[int, Any] = {}
-        errors: list[tuple[int, str]] = []
-        deadline = time.monotonic() + self.ack_timeout
-        while pending:
-            try:
-                tag, wid, mstep, payload = self._result_q.get(timeout=1.0)
-            except _queue.Empty:
-                dead = [i for i in pending
-                        if not self._workers[i][0].is_alive()]
-                if dead:
-                    raise RuntimeError(
-                        f"writer process(es) {dead} died before acking "
-                        f"{kind!r} — step aborted (not committed)")
-                if time.monotonic() > deadline:
-                    raise RuntimeError(
-                        f"timed out after {self.ack_timeout}s waiting for "
-                        f"{kind!r} from writer(s) {sorted(pending)}")
-                continue
-            if tag == "error":
-                if step is not None and mstep is not None and mstep != step:
-                    continue       # stale error from an already-aborted step
-                errors.append((wid, payload))
-                pending.discard(wid)
-            elif tag == kind and (step is None or mstep == step):
-                got[wid] = payload
-                pending.discard(wid)
-            # anything else: stale ack from an aborted step — drop it
-        if errors:
-            detail = "\n".join(f"--- writer {i} ---\n{tb}"
-                               for i, tb in errors)
-            raise RuntimeError(
-                f"parallel write failed on writer(s) "
-                f"{[i for i, _ in errors]}:\n{detail}")
-        return got
+        return collect_acks(self._workers, self._result_q, kind, expect,
+                            timeout=self.ack_timeout, step=step)
 
     def _read_shard_record(self, wid: int, info: dict, step: int) -> dict:
         """Phase-1 validation: read the sealed shard record back from disk
@@ -368,17 +515,34 @@ class ParallelBpWriter:
         if self._closed:
             return
         self._closed = True
+        from repro.core.darshan import MONITOR
         errors: list[BaseException] = []
-        for _, tq in self._workers:
-            tq.put(("close", None, None))
-        try:
-            self._collect("closed", [i for i, (p, _) in
-                                     enumerate(self._workers)
-                                     if p.is_alive()])
-        except BaseException as e:              # noqa: BLE001
-            errors.append(e)
-        for p, _ in self._workers:
-            p.join(timeout=10.0)
+        if self._plane is not None:
+            # release, don't kill: workers fsync+close this series' files
+            # and go back to idle — the plane is reusable immediately
+            for wid in range(self.m):
+                self._workers[wid][1].put(("finish", None, None))
+            try:
+                got = self._collect(
+                    "finished", [i for i in range(self.m)
+                                 if self._workers[i][0].is_alive()])
+                for snap in got.values():
+                    MONITOR.merge(snap)
+            except BaseException as e:          # noqa: BLE001
+                errors.append(e)
+        else:
+            for _, tq in self._workers:
+                tq.put(("close", None, None))
+            try:
+                got = self._collect(
+                    "closed", [i for i, (p, _) in enumerate(self._workers)
+                               if p.is_alive()])
+                for snap in got.values():
+                    MONITOR.merge(snap)
+            except BaseException as e:          # noqa: BLE001
+                errors.append(e)
+            for p, _ in self._workers:
+                p.join(timeout=10.0)
         if self.cfg.fsync_policy != "step":
             self._md.fsync()
             self._idx.fsync()

@@ -59,6 +59,28 @@ class OstPool:
         return self.root / f"ost{ost}" / obj_name
 
 
+def logical_size_of(pool: OstPool, name: str, cfg: StripeConfig) -> int:
+    """Logical byte length of a striped layout recovered from the on-disk
+    object sizes alone (stat-only — no object file is opened). raid0: the
+    exact value is the max over OSTs of the logical span its object
+    extends to. Shared by read-mode `StripedFile` and `jbpfsck`'s
+    O(metadata) extent checks."""
+    size = 0
+    for k in range(cfg.stripe_count):
+        p = pool.object_path(k, f"{name}.obj")
+        if not p.exists():
+            continue
+        osz = p.stat().st_size
+        if osz == 0:
+            continue
+        full, tail = divmod(osz, cfg.stripe_size)
+        last = full - (0 if tail else 1)           # last stripe idx on k
+        span = ((last * cfg.stripe_count + k) * cfg.stripe_size +
+                (tail or cfg.stripe_size))
+        size = max(size, span)
+    return size
+
+
 class StripedFile:
     """Write/read a logical byte stream striped across an OstPool.
 
@@ -88,23 +110,7 @@ class StripedFile:
                 p = pool.object_path(k, f"{name}.obj")
                 self._handles[k] = open_file(p, "wb", rank=rank)
         else:
-            # raid0 logical size: every full stripe row adds count*size; the
-            # exact value is the max over OSTs of the logical span its
-            # object extends to.
-            size = 0
-            for k in range(cfg.stripe_count):
-                p = pool.object_path(k, f"{name}.obj")
-                if not p.exists():
-                    continue
-                osz = p.stat().st_size
-                if osz == 0:
-                    continue
-                full, tail = divmod(osz, cfg.stripe_size)
-                last = full - (0 if tail else 1)       # last stripe idx on k
-                span = ((last * cfg.stripe_count + k) * cfg.stripe_size +
-                        (tail or cfg.stripe_size))
-                size = max(size, span)
-            self.logical_size = size
+            self.logical_size = logical_size_of(pool, name, cfg)
 
     # ----------------------------------------------------------------- write
     def write(self, data: bytes, offset: Optional[int] = None) -> int:

@@ -16,6 +16,7 @@ equal `live` exactly — `assert_parity(live, posthoc)` is the guarantee.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from typing import Optional, Union
 
@@ -34,22 +35,27 @@ def attach_reducers(stream: SstStream, rset: ReducerSet,
 
 
 def reduce_posthoc(series: Union[str, BpReader], rset: ReducerSet,
-                   *, steps: Optional[list] = None) -> dict:
+                   *, steps: Optional[list] = None,
+                   parallel: Optional[int] = None) -> dict:
     """Replay a series on disk through the reducers, in sorted step order
     (the same order a live FIFO consumer observed). Only the variables the
-    reducers declare in `needs` are read from the subfiles."""
-    own_reader = not isinstance(series, BpReader)
-    reader = BpReader(series) if own_reader else series
+    reducers declare in `needs` are read from the subfiles. `parallel=N`
+    fans each variable's chunk reads over a ReaderPool; the default
+    (None) leaves a caller-owned reader's own configured parallelism in
+    charge. A reader WE open is managed as a context (pool + subfile
+    handles released even when a reducer or a corrupt chunk raises
+    mid-replay); a caller-owned reader is left open for the caller."""
+    own = not isinstance(series, BpReader)
+    cm = (BpReader(series, parallel=parallel or 0) if own
+          else contextlib.nullcontext(series))
     needed = rset.needed_vars
-    try:
+    with cm as reader:
         for step in (reader.valid_steps() if steps is None else steps):
             names = reader.var_names(step)
             if needed is not None:
                 names = [n for n in names if n in needed]
-            rset.update(step, {n: reader.read_var(step, n) for n in names})
-    finally:
-        if own_reader:
-            reader.close()      # release the cached subfile handles
+            rset.update(step, {n: reader.read_var(step, n, parallel=parallel)
+                               for n in names})
     return rset.results()
 
 

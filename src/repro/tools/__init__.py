@@ -1,1 +1,14 @@
-"""Command-line tools for JBP/openPMD series (`python -m repro.tools.<x>`)."""
+"""Command-line maintenance tools for JBP/openPMD series
+(`python -m repro.tools.<x>`):
+
+    jbpls      bpls-style metadata listing (O(metadata), zero data.* reads)
+    jbprepack  rewrite a series at a new aggregator count / codec /
+               striping — byte-equivalent under the reader
+    jbpfsck    O(metadata) integrity scan; --repair truncates/reseals to
+               the last consistent step
+
+All three share the `repro.tools._runner` conventions: exit codes
+(0 clean, 1 issues, 2 not-a-series), `--io-report` (the tool's own merged
+Darshan counters), and `--parallel N` (ReaderPool fan-out) where payload
+reads happen.
+"""

@@ -1,0 +1,90 @@
+"""Shared runner for the `repro.tools` CLIs (jbpls / jbprepack / jbpfsck).
+
+One place for the things every series tool needs: the series-path sanity
+check (exit code 2, fsck-style, when the argument is not a JBP series), the
+common flags (`--io-report`, `--parallel`), the Darshan self-report, and
+the `python -m repro.tools.<x>` entry-point guard.
+
+Exit code convention (shared across the subsystem, fsck(8)-flavoured):
+
+    0  clean / success
+    1  issues found (fsck) or operation failed on a valid series
+    2  usage error / not a JBP series
+
+`--io-report` prints the tool's OWN merged Darshan counters to stderr at
+exit — for jbpls that is the proof of the O(metadata) claim (zero data.*
+reads); for jbprepack/jbpfsck it attributes the run's I/O to read/write/
+meta time exactly like `parser_dump` does for the write plane. Counters
+from ReaderPool worker threads land in the same process-wide MONITOR, so
+the report always covers the whole read plane.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Optional
+
+from repro.core.bp_engine import BpReader
+from repro.core.darshan import MONITOR
+
+EXIT_OK = 0
+EXIT_ISSUES = 1
+EXIT_USAGE = 2
+
+
+def make_parser(prog: str, description: str, *,
+                parallel_flag: bool = False) -> argparse.ArgumentParser:
+    """ArgumentParser preloaded with the flags every tool shares."""
+    ap = argparse.ArgumentParser(prog=prog, description=description)
+    ap.add_argument("--io-report", action="store_true", dest="io_report",
+                    help="print this run's own Darshan counters (reads/"
+                         "writes/meta) to stderr on exit")
+    if parallel_flag:
+        ap.add_argument("--parallel", type=int, default=0, metavar="N",
+                        help="fan chunk reads out over N ReaderPool workers "
+                             "(0 = serial)")
+    return ap
+
+
+def check_series(path) -> Optional[str]:
+    """None when `path` looks like a JBP series, else the complaint."""
+    p = pathlib.Path(str(path))
+    if not p.is_dir():
+        return f"{p}: not a directory"
+    if not (p / "md.idx").exists():
+        return f"{p}: not a JBP series (no md.idx)"
+    return None
+
+
+def open_reader(path, *, parallel: int = 0, prog: str = "tool"):
+    """BpReader on a validated series path, or None (after printing the
+    complaint to stderr) — callers translate None to EXIT_USAGE."""
+    err = check_series(path)
+    if err is not None:
+        print(f"{prog}: {err}", file=sys.stderr)
+        return None
+    return BpReader(path, parallel=parallel)
+
+
+def io_report(prog: str):
+    """The tool's own merged I/O counters, darshan-parser style, stderr."""
+    rep = MONITOR.report()
+    tot = rep["total"]
+    print(f"# {prog} --io-report (merged, whole read/write plane)",
+          file=sys.stderr)
+    for k in ("POSIX_OPENS", "POSIX_READS", "POSIX_BYTES_READ",
+              "POSIX_WRITES", "POSIX_BYTES_WRITTEN", "POSIX_SEEKS",
+              "POSIX_FSYNCS"):
+        print(f"{prog}: {k} = {tot.get(k, 0.0):.0f}", file=sys.stderr)
+    for k in ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME"):
+        print(f"{prog}: {k} = {tot.get(k, 0.0):.6f}s", file=sys.stderr)
+
+
+def run_tool(main_fn, argv=None) -> int:
+    """Uniform entry point: returns main_fn's exit code, mapping argparse
+    SystemExit(2) through unchanged (usage errors share EXIT_USAGE)."""
+    try:
+        return int(main_fn(argv))
+    except SystemExit as e:                      # argparse error paths
+        return int(e.code or 0)

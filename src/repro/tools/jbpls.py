@@ -20,10 +20,14 @@ Options:
     --var SUBSTR  filter variables by substring
     --dump VAR    read and print a variable's values (touches data.*)
     --json        machine-readable output of everything listed
+    --parallel N  ReaderPool workers for --dump reads
+    --io-report   print this run's own Darshan counters to stderr
+
+Shares the `repro.tools._runner` conventions (exit codes, --io-report)
+with jbprepack and jbpfsck.
 """
 from __future__ import annotations
 
-import argparse
 import datetime
 import json
 import pathlib
@@ -33,6 +37,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.bp_engine import BpReader
+from repro.tools import _runner as R
 
 
 def _fmt_bytes(n: float) -> str:
@@ -134,9 +139,10 @@ def format_listing(sv: dict, *, long_listing: bool = False,
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="jbpls", description="bpls-style metadata listing of a JBP "
-        "(BP4) series — O(metadata) I/O, no subfile reads")
+    ap = R.make_parser(
+        "jbpls", "bpls-style metadata listing of a JBP "
+        "(BP4) series — O(metadata) I/O, no subfile reads",
+        parallel_flag=True)
     ap.add_argument("series", help="path to the <name>.bp4 directory")
     ap.add_argument("-l", action="store_true", dest="long_listing",
                     help="long listing (bytes, ratio, min/max)")
@@ -156,36 +162,39 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     path = pathlib.Path(args.series)
-    if not (path / "md.idx").exists():
-        print(f"jbpls: {path}: not a JBP series (no md.idx)", file=sys.stderr)
-        return 2
-    reader = BpReader(path)
-    if not reader.valid_steps():
-        print(f"jbpls: {path}: no valid steps", file=sys.stderr)
-        return 1
-    if args.step is not None and args.step not in reader.idx_records:
-        print(f"jbpls: {path}: no valid step {args.step} "
-              f"(have {_step_span(reader.valid_steps())})", file=sys.stderr)
-        return 1
-    sv = survey(reader, step=args.step, var_filter=args.var)
-    if args.as_json:
-        print(json.dumps(sv, indent=1, default=_json_default))
-    else:
-        print(format_listing(sv, long_listing=args.long_listing,
-                             show_steps=args.show_steps,
-                             show_attrs=args.show_attrs,
-                             show_layout=args.show_layout))
-    if args.dump:
-        step = args.step if args.step is not None else sv["steps"][-1]
-        try:
-            arr = reader.read_var(step, args.dump)
-        except KeyError:
-            print(f"jbpls: no variable {args.dump!r} at step {step} "
-                  f"(have {reader.var_names(step)})", file=sys.stderr)
-            return 1
-        print(f"  {args.dump} @ step {step}:")
-        print(np.array2string(arr, threshold=64, precision=6))
-    return 0
+    reader = R.open_reader(path, parallel=args.parallel, prog="jbpls")
+    if reader is None:
+        return R.EXIT_USAGE
+    with reader:
+        if not reader.valid_steps():
+            print(f"jbpls: {path}: no valid steps", file=sys.stderr)
+            return R.EXIT_ISSUES
+        if args.step is not None and args.step not in reader.idx_records:
+            print(f"jbpls: {path}: no valid step {args.step} "
+                  f"(have {_step_span(reader.valid_steps())})",
+                  file=sys.stderr)
+            return R.EXIT_ISSUES
+        sv = survey(reader, step=args.step, var_filter=args.var)
+        if args.as_json:
+            print(json.dumps(sv, indent=1, default=_json_default))
+        else:
+            print(format_listing(sv, long_listing=args.long_listing,
+                                 show_steps=args.show_steps,
+                                 show_attrs=args.show_attrs,
+                                 show_layout=args.show_layout))
+        if args.dump:
+            step = args.step if args.step is not None else sv["steps"][-1]
+            try:
+                arr = reader.read_var(step, args.dump)
+            except KeyError:
+                print(f"jbpls: no variable {args.dump!r} at step {step} "
+                      f"(have {reader.var_names(step)})", file=sys.stderr)
+                return R.EXIT_ISSUES
+            print(f"  {args.dump} @ step {step}:")
+            print(np.array2string(arr, threshold=64, precision=6))
+    if args.io_report:
+        R.io_report("jbpls")
+    return R.EXIT_OK
 
 
 def _json_default(o):
@@ -197,4 +206,4 @@ def _json_default(o):
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    raise SystemExit(R.run_tool(main))

@@ -74,6 +74,34 @@ def test_async_save_overlaps(tmpdir_path):
     assert list_checkpoints(tmpdir_path) == [1, 2]
 
 
+def test_manager_persistent_parallel_plane_reuses_worker_pids(tmpdir_path):
+    """ROADMAP item closed: parallel_io checkpoints must NOT spawn/tear
+    down W processes per save — the manager keeps one WriterPlane alive,
+    and two consecutive saves run on the SAME worker pids."""
+    state = {"w": np.arange(256, dtype=np.float32).reshape(16, 16),
+             "b": np.ones(16, dtype=np.float32)}
+    with CheckpointManager(tmpdir_path, every=1, keep_n=3,
+                           async_write=False, parallel_io=2,
+                           n_io_ranks=4) as mgr:
+        mgr.save(state, 1)
+        mgr.wait()
+        plane = mgr._plane
+        assert plane is not None and plane.alive()
+        pids = plane.pids()
+        mgr.save(state, 2)
+        mgr.wait()
+        assert mgr._plane is plane, "manager respawned the plane"
+        assert plane.pids() == pids, "saves did not reuse the worker pids"
+        assert all(p.is_alive() for p, _ in plane.workers)
+        assert list_checkpoints(tmpdir_path) == [1, 2]
+        restored, step = mgr.restore_latest(state, parallel=2)
+        assert step == 2
+        np.testing.assert_array_equal(restored["w"], state["w"])
+    # close() tore the plane down
+    assert not plane.alive()
+    assert all(not p.is_alive() for p, _ in plane.workers)
+
+
 @pytest.mark.slow
 def test_elastic_resharding_subprocess(tmpdir_path):
     """Save on a (2,2) mesh, restore on a (4,1) mesh — different device

@@ -243,6 +243,89 @@ def test_profiling_has_two_phase_timings(tmpdir_path):
         assert len(step["worker_s"]) >= 1
 
 
+# ------------------------------------------------- persistent writer plane
+def test_writer_plane_reused_across_series_same_pids(tmpdir_path):
+    """Two series written through one WriterPlane reuse the SAME worker
+    processes (retarget via open/finish, no respawn) and both read back."""
+    from repro.core.parallel_engine import WriterPlane
+
+    with WriterPlane(2) as plane:
+        pids = plane.pids()
+        for i in range(2):
+            truth = _write_series(
+                ParallelBpWriter, tmpdir_path / f"s{i}.bp4",
+                n_ranks=4, steps=2, n_writers=2, plane=plane)
+            assert plane.pids() == pids, "plane respawned between series"
+            assert all(p.is_alive() for p, _ in plane.workers)
+            r = BpReader(tmpdir_path / f"s{i}.bp4")
+            assert r.valid_steps() == [0, 1]
+            np.testing.assert_array_equal(r.read_var(1, "var/x"), truth[1])
+    assert all(not p.is_alive() for p, _ in plane.workers)
+
+
+def test_writer_plane_output_byte_identical_to_owned_workers(tmpdir_path):
+    """A plane-backed write must be byte-identical to the spawn-per-series
+    writer (same subfiles, same md.0) — the plane is purely a lifetime
+    optimization."""
+    from repro.core.parallel_engine import WriterPlane
+
+    _write_series(ParallelBpWriter, tmpdir_path / "own.bp4", n_ranks=4,
+                  steps=2, n_writers=2)
+    with WriterPlane(2) as plane:
+        _write_series(ParallelBpWriter, tmpdir_path / "pl.bp4", n_ranks=4,
+                      steps=2, n_writers=2, plane=plane)
+    for name in ["data.0", "data.1", "md.0"]:
+        assert (tmpdir_path / "own.bp4" / name).read_bytes() == \
+            (tmpdir_path / "pl.bp4" / name).read_bytes(), name
+
+
+def test_writer_plane_clamps_to_fewer_writers(tmpdir_path):
+    """A writer asking for more writers than the plane has uses the
+    plane's worker count; asking for fewer opens only that many."""
+    from repro.core.parallel_engine import WriterPlane
+
+    with WriterPlane(2) as plane:
+        w = ParallelBpWriter(tmpdir_path / "a.bp4", 8, EngineConfig(),
+                             n_writers=4, plane=plane)
+        assert w.m == 2
+        w.begin_step(0)
+        w.put("v", np.arange(8, dtype=np.float32), global_shape=(8,),
+              offset=(0,), rank=0)
+        w.end_step()
+        w.close()
+        w2 = ParallelBpWriter(tmpdir_path / "b.bp4", 8, EngineConfig(),
+                              n_writers=1, plane=plane)
+        assert w2.m == 1
+        w2.begin_step(0)
+        w2.put("v", np.arange(8, dtype=np.float32), global_shape=(8,),
+               offset=(0,), rank=0)
+        w2.end_step()
+        w2.close()
+        assert len(list((tmpdir_path / "b.bp4").glob("data.*"))) == 1
+
+
+# --------------------------------------------- darshan counters from workers
+def test_worker_darshan_counters_merged_into_parent(tmpdir_path):
+    """Per-worker I/O happens in the worker PROCESS, whose MONITOR the
+    parent never sees — unless the 'closed'/'finished' ack ships the
+    counters back. After close(), the parent's parser_dump must cover the
+    workers' data.<w>/shard writes."""
+    from repro.core.darshan import MONITOR
+
+    MONITOR.reset()
+    _write_series(ParallelBpWriter, tmpdir_path / "p.bp4", n_ranks=4,
+                  steps=2, n_writers=2)
+    rep = MONITOR.report()["files"]
+    for w in (0, 1):
+        data = [c for p, c in rep.items() if p.endswith(f"data.{w}")]
+        assert data and data[0].get("POSIX_BYTES_WRITTEN", 0) > 0, \
+            f"worker {w} subfile writes missing from the merged monitor"
+        shard = [c for p, c in rep.items() if p.endswith(f"md.{w}.shard")]
+        assert shard and shard[0].get("POSIX_BYTES_WRITTEN", 0) > 0
+    dump = MONITOR.parser_dump()
+    assert "data.1" in dump
+
+
 # ------------------------------------------------------------------- wiring
 def test_series_parallel_io_roundtrip(tmpdir_path):
     from repro.core.openpmd import Series

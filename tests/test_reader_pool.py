@@ -1,0 +1,311 @@
+"""ReaderPool + parallel read plane: pool scheduling semantics (affinity,
+work stealing, error surfacing), byte parity of `read_var(parallel=N)`
+with serial reads across codecs/layouts, and the wiring through Series,
+reduce_posthoc and checkpoint restore."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import MONITOR
+from repro.core.reader_pool import ReaderPool
+from repro.core.striping import StripeConfig
+
+
+# ----------------------------------------------------------------- pool unit
+def test_pool_runs_every_task_with_affinity():
+    pool = ReaderPool(3)
+    hits = {}
+    lock = threading.Lock()
+
+    def task(key):
+        with lock:
+            hits.setdefault(key, []).append(threading.current_thread().name)
+
+    for i in range(30):
+        pool.submit(i % 5, task, i % 5)
+    pool.drain()
+    pool.shutdown()
+    # every task ran exactly once, keyed correctly (which worker ran it is
+    # scheduling-dependent — stealing may legally drain everything on one)
+    assert sorted(hits) == [0, 1, 2, 3, 4]
+    assert all(len(v) == 6 for v in hits.values())
+
+
+def test_pool_steals_from_straggler_queue():
+    """Every task is submitted with ONE affinity (one owner worker); with
+    4 workers and blocking tasks, idle workers must steal — total wall
+    time bounds prove >1 worker participated."""
+    pool = ReaderPool(4)
+    ran = []
+    lock = threading.Lock()
+
+    def task(i):
+        time.sleep(0.05)
+        with lock:
+            ran.append(threading.current_thread().name)
+
+    t0 = time.perf_counter()
+    for i in range(8):
+        pool.submit(0, task, i)          # all owned by worker 0
+    pool.drain()
+    wall = time.perf_counter() - t0
+    pool.shutdown()
+    assert len(ran) == 8
+    assert len(set(ran)) > 1, "no work stealing happened"
+    assert wall < 8 * 0.05, f"tasks ran fully serially ({wall:.2f}s)"
+
+
+def test_pool_error_surfaced_in_drain_pool_survives():
+    pool = ReaderPool(2)
+
+    def boom():
+        raise ValueError("injected")
+
+    pool.submit(0, boom)
+    with pytest.raises(ValueError, match="injected"):
+        pool.drain()
+    done = []
+    pool.submit(1, done.append, 1)       # pool must still be usable
+    pool.drain()
+    assert done == [1]
+    pool.shutdown()
+
+
+def test_pool_batches_isolate_errors():
+    """Two callers sharing one pool: a failure in one caller's batch must
+    surface in THAT caller's drain_batch only — never in the other's (and
+    never vanish)."""
+    pool = ReaderPool(2)
+    good, bad = pool.batch(), pool.batch()
+
+    def boom():
+        raise ValueError("bad batch task")
+
+    done = []
+    for _ in range(4):
+        pool.submit(0, done.append, 1, batch=good)
+        pool.submit(1, boom, batch=bad)
+    pool.drain_batch(good)                   # must not see bad's error
+    assert done == [1, 1, 1, 1]
+    with pytest.raises(ValueError, match="bad batch task"):
+        pool.drain_batch(bad)
+    pool.drain()                             # global barrier: also clean
+    pool.shutdown()
+
+
+def test_failed_parallel_read_does_not_poison_later_reads(tmpdir_path):
+    """A corrupt chunk must raise from ITS read_var call; subsequent
+    parallel reads of healthy variables on the same reader/pool succeed."""
+    w = BpWriter(tmpdir_path / "s.bp4", 4,
+                 EngineConfig(aggregators=2, codec="zlib"))
+    rng = np.random.default_rng(2)
+    w.begin_step(0)
+    ga = rng.normal(size=(64,)).astype(np.float32)
+    gb = rng.normal(size=(64,)).astype(np.float32)
+    for r in range(4):
+        w.put("a", ga[r * 16:(r + 1) * 16], global_shape=(64,),
+              offset=(r * 16,), rank=r)
+        w.put("b", gb[r * 16:(r + 1) * 16], global_shape=(64,),
+              offset=(r * 16,), rank=r)
+    w.end_step()
+    w.close()
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        ch = next(c for c in r.iter_chunks(0, "b") if c.agg == 1)
+        data = tmpdir_path / "s.bp4" / "data.1"
+        raw = bytearray(data.read_bytes())
+        for i in range(ch.file_offset, ch.file_offset + ch.nbytes):
+            raw[i] ^= 0xFF                   # corrupt ONLY b's chunk
+        data.write_bytes(bytes(raw))
+        with pytest.raises(Exception):
+            r.read_var(0, "b", parallel=4)
+        got = r.read_var(0, "a", parallel=4)  # same pool, healthy var
+        np.testing.assert_array_equal(got, ga)
+
+
+def test_pool_submit_after_shutdown_rejected():
+    pool = ReaderPool(1)
+    pool.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        pool.submit(0, lambda: None)
+
+
+# ------------------------------------------------------------- read parity
+def _write(path, *, n_ranks=8, aggregators=4, codec="none", steps=2,
+           stripe=None, cols=4):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3,
+                       stripe=stripe, n_osts=4)
+    w = BpWriter(path, n_ranks, cfg)
+    rng = np.random.default_rng(5)
+    truth = {}
+    rows = n_ranks * 16
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(rows, cols)).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16],
+                  global_shape=g.shape, offset=(r * 16, 0), rank=r)
+        w.end_step()
+    w.close()
+    return truth
+
+
+@pytest.mark.parametrize("codec", ["none", "blosc", "zlib"])
+def test_parallel_read_bit_parity(tmpdir_path, codec):
+    """read_var(parallel=4) over an 8-chunk box must return bytes
+    IDENTICAL to the serial read — full arrays and partial boxes."""
+    truth = _write(tmpdir_path / "s.bp4", codec=codec)
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        for s in truth:
+            a = r.read_var(s, "var/x")
+            b = r.read_var(s, "var/x", parallel=4)
+            assert a.tobytes() == b.tobytes()
+            np.testing.assert_array_equal(b, truth[s])
+        sel_serial = r.read_var(1, "var/x", offset=(8, 1), extent=(100, 2))
+        sel_par = r.read_var(1, "var/x", offset=(8, 1), extent=(100, 2),
+                             parallel=4)
+        assert sel_serial.tobytes() == sel_par.tobytes()
+        np.testing.assert_array_equal(sel_par, truth[1][8:108, 1:3])
+
+
+def test_parallel_read_constructor_default(tmpdir_path):
+    truth = _write(tmpdir_path / "s.bp4")
+    with BpReader(tmpdir_path / "s.bp4", parallel=3) as r:
+        assert r.default_parallel == 3
+        np.testing.assert_array_equal(r.read_var(0, "var/x"), truth[0])
+        # per-call override back to serial
+        np.testing.assert_array_equal(
+            r.read_var(0, "var/x", parallel=0), truth[0])
+
+
+def test_parallel_read_striped_layout(tmpdir_path):
+    truth = _write(tmpdir_path / "s.bp4", n_ranks=4, aggregators=2,
+                   stripe=StripeConfig(stripe_count=2, stripe_size=256))
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        a = r.read_var(1, "var/x")
+        b = r.read_var(1, "var/x", parallel=4)
+        assert a.tobytes() == b.tobytes()
+        np.testing.assert_array_equal(b, truth[1])
+
+
+def test_parallel_read_empty_selection_zero_payload_io(tmpdir_path):
+    _write(tmpdir_path / "s.bp4")
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        MONITOR.reset()
+        out = r.read_var(0, "var/x", offset=(0, 0), extent=(0, 0),
+                         parallel=4)
+        assert out.size == 0
+        files = MONITOR.report()["files"]
+        assert not any("data." in p and c.get("POSIX_BYTES_READ", 0) > 0
+                       for p, c in files.items())
+
+
+def test_reader_close_releases_pool_and_thread_handles(tmpdir_path):
+    truth = _write(tmpdir_path / "s.bp4")
+    r = BpReader(tmpdir_path / "s.bp4")
+    r.read_var(0, "var/x", parallel=4)
+    pool = r._pool
+    assert pool is not None and len(r._side_handles) > 0
+    r.close()
+    assert r._pool is None and r._side_handles == []
+    with pytest.raises(RuntimeError, match="shut down"):
+        pool.submit(0, lambda: None)
+    # metadata stays queryable and payload handles reopen lazily
+    np.testing.assert_array_equal(r.read_var(1, "var/x", parallel=2),
+                                  truth[1])
+    r.close()
+
+
+def test_pool_grows_on_larger_request(tmpdir_path):
+    _write(tmpdir_path / "s.bp4")
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        r.read_var(0, "var/x", parallel=2)
+        assert r._pool.n_workers == 2
+        r.read_var(0, "var/x", parallel=4)
+        assert r._pool.n_workers == 4
+        r.read_var(0, "var/x", parallel=2)     # smaller request: reuse
+        assert r._pool.n_workers == 4
+
+
+# ----------------------------------------------------------------- wiring
+def test_series_parallel_read(tmpdir_path):
+    from repro.core.openpmd import Series
+    with Series(tmpdir_path / "d.bp4", "w", n_ranks=4,
+                engine_config=EngineConfig(aggregators=2)) as s:
+        rc = s.iterations[0].meshes["density"][""]
+        arr = np.linspace(0, 1, 64, dtype=np.float32)
+        rc.reset_dataset(arr.dtype, arr.shape)
+        for r in range(4):
+            rc.store_chunk(arr[r * 16:(r + 1) * 16], offset=(r * 16,),
+                           rank=r)
+        s.flush()
+    sr = Series(tmpdir_path / "d.bp4", "r", parallel_read=4)
+    assert sr._reader().default_parallel == 4
+    got = sr.iterations[0].meshes["density"][""].load_chunk()
+    np.testing.assert_array_equal(got, arr)
+    sr.close()
+
+
+def test_reduce_posthoc_parallel_parity(tmpdir_path):
+    from repro.insitu.reducers import Moments, ReducerSet
+    from repro.insitu.runner import reduce_posthoc
+    _write(tmpdir_path / "s.bp4", codec="blosc")
+    serial = reduce_posthoc(tmpdir_path / "s.bp4",
+                            ReducerSet([Moments("var/x")]))
+    par = reduce_posthoc(tmpdir_path / "s.bp4",
+                         ReducerSet([Moments("var/x")]), parallel=4)
+    from repro.insitu.runner import assert_parity
+    assert_parity(serial, par)
+
+
+def test_reduce_posthoc_closes_reader_on_reducer_error(tmpdir_path):
+    """The exception-path cleanup contract: a reducer blowing up mid-replay
+    must not leak the reader's pool/handles (context manager throughout)."""
+    from repro.insitu.reducers import ReducerSet
+    from repro.insitu.runner import reduce_posthoc
+
+    _write(tmpdir_path / "s.bp4")
+    seen = {}
+    real_close = BpReader.close
+
+    def tracking_close(self):
+        seen["closed"] = True
+        real_close(self)
+
+    class BoomSet(ReducerSet):
+        def update(self, step, vars):
+            raise RuntimeError("reducer exploded")
+
+    BpReader.close = tracking_close
+    try:
+        with pytest.raises(RuntimeError, match="reducer exploded"):
+            reduce_posthoc(tmpdir_path / "s.bp4", BoomSet([]), parallel=2)
+    finally:
+        BpReader.close = real_close
+    assert seen.get("closed"), "reader not closed on the exception path"
+
+
+def test_reduce_posthoc_leaves_caller_reader_open(tmpdir_path):
+    from repro.insitu.reducers import Moments, ReducerSet
+    from repro.insitu.runner import reduce_posthoc
+    truth = _write(tmpdir_path / "s.bp4")
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        reduce_posthoc(r, ReducerSet([Moments("var/x")]))
+        # still usable: posthoc over a caller-owned reader must not close it
+        np.testing.assert_array_equal(r.read_var(0, "var/x"), truth[0])
+
+
+def test_restore_checkpoint_parallel(tmpdir_path):
+    from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+    state = {"w": np.arange(256, dtype=np.float32).reshape(16, 16),
+             "b": np.ones(16, dtype=np.float32)}
+    save_checkpoint(tmpdir_path, state, 3, n_io_ranks=4,
+                    engine_config=EngineConfig(aggregators=2, codec="blosc"))
+    like = {k: np.zeros_like(v) for k, v in state.items()}
+    restored, step = restore_checkpoint(tmpdir_path, like, parallel=4)
+    assert step == 3
+    for k in state:
+        np.testing.assert_array_equal(restored[k], state[k])

@@ -1,0 +1,274 @@
+"""repro.tools maintenance subsystem: jbprepack re-aggregation parity
+(property-based over W', codec, payload shapes), jbpfsck detection/repair
+of torn and truncated series, and the shared tools-runner conventions."""
+import json
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+from _propcheck import given, settings, strategies as st  # noqa: E402
+
+from repro.core.bp_engine import (IDX_SIZE, BpReader, BpWriter,  # noqa: E402
+                                  EngineConfig)
+from repro.tools import jbpfsck, jbpls, jbprepack  # noqa: E402
+from repro.tools._runner import EXIT_ISSUES, EXIT_OK, EXIT_USAGE  # noqa: E402
+from repro.tools.jbprepack import repack, verify_equivalent  # noqa: E402
+
+
+def _write_series(path, *, n_ranks=8, aggregators=4, codec="none", steps=3,
+                  seed=7, with_scalar=True):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3)
+    w = BpWriter(path, n_ranks, cfg)
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        w.begin_step(s)
+        w.set_attribute(f"/data/{s}/time", float(s) * 0.5)
+        g = rng.normal(size=(n_ranks * 8, 3)).astype(np.float32)
+        for r in range(n_ranks):
+            w.put("mesh/rho", g[r * 8:(r + 1) * 8], global_shape=g.shape,
+                  offset=(r * 8, 0), rank=r)
+        ints = (rng.integers(0, 1000, size=n_ranks * 4)
+                .astype(np.int64))
+        for r in range(n_ranks):
+            w.put("particles/id", ints[r * 4:(r + 1) * 4],
+                  global_shape=ints.shape, offset=(r * 4,), rank=r)
+        if with_scalar:
+            w.put("scalar/t", np.array([s], np.int64), global_shape=(1,),
+                  offset=(0,), rank=0)
+        w.end_step()
+    w.close()
+
+
+def _chunk_table(reader, step, name):
+    """Comparable chunk-structure view: the repack contract preserves
+    (rank, offset, extent, vmin, vmax) — NOT agg/foff/nbytes, which the
+    new aggregation/codec legitimately changes."""
+    return sorted((c.rank, c.offset, c.extent, c.vmin, c.vmax)
+                  for c in reader.iter_chunks(step, name))
+
+
+# ------------------------------------------------------------ repack parity
+@settings(max_examples=8, deadline=None)
+@given(w_dst=st.sampled_from([1, 2, 3, 6]),
+       codec=st.sampled_from(["none", "blosc"]),
+       parallel=st.sampled_from([0, 3]))
+def test_repack_reaggregation_parity(w_dst, codec, parallel):
+    """Property: repack W=4 -> W' preserves every variable bit-exactly —
+    data (compressed chunks included), per-chunk min/max metadata, chunk
+    (rank, offset, extent) structure and per-step attributes.
+
+    (Manages its own temp dir: real-hypothesis health checks forbid
+    function-scoped fixtures under @given.)"""
+    import pathlib
+    import shutil
+    import tempfile
+    root = pathlib.Path(tempfile.mkdtemp(prefix="repro-repack-"))
+    try:
+        src = root / "src.bp4"
+        dst = root / "dst.bp4"
+        _write_series(src, aggregators=4, codec="blosc")
+        repack(src, dst, n_writers=w_dst, codec=codec, parallel=parallel)
+        n = verify_equivalent(src, dst)
+        assert n == 3 * 3                # 3 steps x 3 vars, all bit-equal
+        with BpReader(src) as a, BpReader(dst) as b:
+            assert a.valid_steps() == b.valid_steps()
+            for s in a.valid_steps():
+                assert a.attributes(s) == b.attributes(s)
+                for name in a.var_names(s):
+                    assert _chunk_table(a, s, name) == \
+                        _chunk_table(b, s, name)
+                    # min/max answered from metadata must agree too
+                    assert a.var_minmax(s, name) == b.var_minmax(s, name)
+            # the output really is W' subfiles (8 source ranks cover all)
+            aggs = {c.agg for s in b.valid_steps()
+                    for c in b.iter_chunks(s, "mesh/rho")}
+            assert aggs == set(range(w_dst))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def test_repack_recompress_changes_stored_not_read(tmpdir_path):
+    # smooth (cumsum) floats — compressible, unlike the noise series
+    w = BpWriter(tmpdir_path / "s.bp4", 4, EngineConfig(aggregators=2))
+    rng = np.random.default_rng(3)
+    g = np.cumsum(rng.normal(scale=1e-3, size=4 * 4096)
+                  ).astype(np.float32)
+    w.begin_step(0)
+    for r in range(4):
+        w.put("mesh/rho", g[r * 4096:(r + 1) * 4096],
+              global_shape=g.shape, offset=(r * 4096,), rank=r)
+    w.end_step()
+    w.close()
+    repack(tmpdir_path / "s.bp4", tmpdir_path / "z.bp4", n_writers=2,
+           codec="blosc")
+    verify_equivalent(tmpdir_path / "s.bp4", tmpdir_path / "z.bp4")
+    with BpReader(tmpdir_path / "s.bp4") as a, \
+            BpReader(tmpdir_path / "z.bp4") as b:
+        raw_a, stored_a = a.var_nbytes(0, "mesh/rho")
+        raw_b, stored_b = b.var_nbytes(0, "mesh/rho")
+        assert raw_a == raw_b
+        assert stored_b < stored_a       # smooth floats compress
+
+
+def test_repack_drops_torn_steps(tmpdir_path):
+    """Repack replays only committed steps — repacking a crashed series
+    is also its repair."""
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    raw = (tmpdir_path / "s.bp4" / "md.idx").read_bytes()
+    (tmpdir_path / "s.bp4" / "md.idx").write_bytes(raw[:2 * IDX_SIZE + 7])
+    repack(tmpdir_path / "s.bp4", tmpdir_path / "r.bp4", n_writers=1)
+    with BpReader(tmpdir_path / "r.bp4") as b:
+        assert b.valid_steps() == [0, 1]
+
+
+def test_repack_cli_verify_and_exit_codes(tmpdir_path, capsys):
+    _write_series(tmpdir_path / "s.bp4", aggregators=2)
+    rc = jbprepack.main([str(tmpdir_path / "s.bp4"),
+                         str(tmpdir_path / "out.bp4"), "-w", "1",
+                         "--parallel", "2", "--verify", "--io-report"])
+    assert rc == EXIT_OK
+    out = capsys.readouterr()
+    assert "bit-identical" in out.out
+    assert "POSIX_BYTES_READ" in out.err       # --io-report went to stderr
+    # refusing to clobber without --force
+    assert jbprepack.main([str(tmpdir_path / "s.bp4"),
+                           str(tmpdir_path / "out.bp4"), "-w", "1"]) \
+        == EXIT_USAGE
+    assert jbprepack.main([str(tmpdir_path / "s.bp4"),
+                           str(tmpdir_path / "out.bp4"), "-w", "2",
+                           "--force"]) == EXIT_OK
+    # not a series
+    assert jbprepack.main([str(tmpdir_path / "nope"),
+                           str(tmpdir_path / "x.bp4"), "-w", "1"]) \
+        == EXIT_USAGE
+
+
+def test_repack_striped_output_roundtrip(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", aggregators=2, steps=2)
+    rc = jbprepack.main([str(tmpdir_path / "s.bp4"),
+                         str(tmpdir_path / "st.bp4"), "-w", "2",
+                         "--stripe", "2x256", "--verify"])
+    assert rc == EXIT_OK
+    assert sorted(p.name for p in
+                  (tmpdir_path / "st.bp4").glob("ost*/data.*.obj"))
+
+
+# ------------------------------------------------------------------- jbpfsck
+def test_fsck_clean_series(tmpdir_path, capsys):
+    _write_series(tmpdir_path / "s.bp4")
+    assert jbpfsck.main([str(tmpdir_path / "s.bp4")]) == EXIT_OK
+    assert "clean" in capsys.readouterr().out
+    assert jbpfsck.main([str(tmpdir_path / "nope")]) == EXIT_USAGE
+
+
+def test_fsck_torn_idx_tail_report_and_repair(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    p = tmpdir_path / "s.bp4" / "md.idx"
+    p.write_bytes(p.read_bytes()[:-13])          # crash during the seal
+    report = jbpfsck.scan(tmpdir_path / "s.bp4")
+    kinds = [i["kind"] for i in report["issues"]]
+    assert "torn-idx-tail" in kinds
+    assert report["committed_steps"] == [0, 1]
+    assert jbpfsck.main([str(tmpdir_path / "s.bp4")]) == EXIT_ISSUES
+    assert jbpfsck.main([str(tmpdir_path / "s.bp4"), "--repair"]) == EXIT_OK
+    # repaired: reader and fsck agree on the resealed prefix
+    assert jbpfsck.scan(tmpdir_path / "s.bp4")["issues"] == []
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        assert r.valid_steps() == [0, 1]
+        assert np.isfinite(r.read_var(1, "mesh/rho")).all()
+
+
+def test_fsck_corrupt_md0_blob_truncates_to_prefix(tmpdir_path):
+    _write_series(tmpdir_path / "s.bp4", steps=3)
+    report = jbpfsck.scan(tmpdir_path / "s.bp4")
+    # corrupt step 1's md.0 blob: steps 1 AND 2 fall off the consistent
+    # prefix (reseal-to-last-consistent-step semantics)
+    md = tmpdir_path / "s.bp4" / "md.0"
+    raw = bytearray(md.read_bytes())
+    off = report["_records"][1][1]
+    raw[off + 5] ^= 0xFF
+    md.write_bytes(bytes(raw))
+    report = jbpfsck.scan(tmpdir_path / "s.bp4")
+    assert [i["kind"] for i in report["issues"]] == ["torn-step"]
+    assert report["committed_steps"] == [0, 2]
+    assert report["consistent_prefix_steps"] == [0]
+    jbpfsck.repair(tmpdir_path / "s.bp4", report)
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        assert r.valid_steps() == [0]
+
+
+def test_fsck_truncated_subfile_detected_and_repaired(tmpdir_path):
+    """A subfile shorter than the chunk table's extents is metadata that
+    validates but payload that is gone — fsck must catch it from stat
+    alone and reseal to the consistent prefix."""
+    _write_series(tmpdir_path / "s.bp4", steps=3, aggregators=2)
+    import os
+    data1 = tmpdir_path / "s.bp4" / "data.1"
+    sizes = jbpfsck.scan(tmpdir_path / "s.bp4")["_max_end"]
+    # keep step 0's extent, cut everything after
+    per_step = sizes[1] // 3
+    os.truncate(data1, per_step)
+    report = jbpfsck.scan(tmpdir_path / "s.bp4")
+    kinds = {i["kind"] for i in report["issues"]}
+    assert kinds == {"orphaned-extent"}
+    assert report["consistent_prefix_steps"] == [0]
+    jbpfsck.repair(tmpdir_path / "s.bp4", report, trim=True)
+    report2 = jbpfsck.scan(tmpdir_path / "s.bp4")
+    assert report2["issues"] == []
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        assert r.valid_steps() == [0]
+        assert np.isfinite(r.read_var(0, "mesh/rho")).all()
+
+
+def test_fsck_parallel_series_shards_and_orphan_prepare(tmpdir_path):
+    """A coordinator crash between prepare and commit leaves sealed shard
+    records with no md.idx commit — fsck reports the orphaned prepare as a
+    NOTE (dead weight, not damage) and a torn shard tail as an ISSUE."""
+    from repro.core.parallel_engine import ParallelBpWriter, shard_path
+    w = ParallelBpWriter(tmpdir_path / "p.bp4", 4, EngineConfig(),
+                         n_writers=2)
+    w.begin_step(0)
+    w.put("v", np.arange(8, dtype=np.float32), global_shape=(8,),
+          offset=(0,), rank=0)
+    w.end_step()
+    w._crash_after_prepare = True
+    w.begin_step(1)
+    w.put("v", np.full(8, 9, np.float32), global_shape=(8,), offset=(0,),
+          rank=0)
+    with pytest.raises(RuntimeError, match="simulated"):
+        w.end_step()
+    w._crash_after_prepare = False
+    w.close()
+    report = jbpfsck.scan(tmpdir_path / "p.bp4")
+    assert report["issues"] == []        # orphaned prepare is NOT damage
+    assert any(n["kind"] == "orphaned-prepare" and n["steps"] == [1]
+               for n in report["notes"])
+    # now tear a shard tail: that IS damage (crash mid-prepare)
+    sp = shard_path(tmpdir_path / "p.bp4", 0)
+    sp.write_bytes(sp.read_bytes()[:-3])
+    report = jbpfsck.scan(tmpdir_path / "p.bp4")
+    assert any(i["kind"] == "torn-shard-tail" for i in report["issues"])
+    jbpfsck.repair(tmpdir_path / "p.bp4", report)
+    assert jbpfsck.scan(tmpdir_path / "p.bp4")["issues"] == []
+
+
+def test_fsck_json_output(tmpdir_path, capsys):
+    _write_series(tmpdir_path / "s.bp4", steps=2)
+    assert jbpfsck.main([str(tmpdir_path / "s.bp4"), "--json"]) == EXIT_OK
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["committed_steps"] == [0, 1]
+    assert doc["issues"] == [] and "repaired" in doc
+    assert "_records" not in doc         # internal fields stay internal
+
+
+# ------------------------------------------------------------ shared runner
+def test_jbpls_shares_runner_conventions(tmpdir_path, capsys):
+    _write_series(tmpdir_path / "s.bp4", steps=2)
+    assert jbpls.main([str(tmpdir_path / "s.bp4"), "-l", "--parallel", "2",
+                       "--dump", "scalar/t", "--io-report"]) == EXIT_OK
+    out = capsys.readouterr()
+    assert "scalar/t" in out.out
+    assert "POSIX_READS" in out.err
+    assert jbpls.main([str(tmpdir_path / "nope")]) == EXIT_USAGE
