@@ -11,6 +11,7 @@ import numpy as np
 
 GiB = 1024 ** 3
 MiB = 1024 ** 2
+KiB = 1024
 
 
 def pic_payload(rank: int, nbytes: int) -> dict[str, np.ndarray]:
@@ -23,8 +24,13 @@ def pic_payload(rank: int, nbytes: int) -> dict[str, np.ndarray]:
 
 
 @contextmanager
-def tmp_io_dir():
-    d = pathlib.Path(tempfile.mkdtemp(prefix="repro-bench-", dir="/tmp"))
+def tmp_io_dir(base: str = "/tmp"):
+    """Scratch dir for one benchmark run. `base="/dev/shm"` puts the series
+    on tmpfs — used when the benchmark isolates a non-storage variable
+    (e.g. the chunk transport) and the disk must be held constant."""
+    if not pathlib.Path(base).is_dir():
+        base = "/tmp"
+    d = pathlib.Path(tempfile.mkdtemp(prefix="repro-bench-", dir=base))
     try:
         yield d
     finally:

@@ -55,6 +55,12 @@ def main(argv=None) -> None:
             writer_counts=(1, 2) if quick else (1, 2, 4),
             bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,
             steps=3 if quick else 4, repeats=2 if quick else 3)),
+        ("parallel_transport", lambda: bench_parallel_io.run_transport_sweep(
+            writer_counts=(2,) if quick else (1, 2, 4),
+            chunk_sizes=((64 * 1024, 4 * 1024**2, 16 * 1024**2) if quick
+                         else (64 * 1024, 1024**2, 4 * 1024**2,
+                               16 * 1024**2, 64 * 1024**2)),
+            steps=3, repeats=2)),
         ("reader_pool", lambda: bench_reader_pool.run(
             parallel_counts=(1, 2) if quick else (1, 2, 4),
             bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,

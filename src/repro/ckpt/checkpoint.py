@@ -68,7 +68,8 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
                     extra_attrs: Optional[dict] = None,
                     async_io: bool = False,
                     parallel_io: int = 0,
-                    writer_plane=None) -> pathlib.Path:
+                    writer_plane=None,
+                    transport: str = "shm") -> pathlib.Path:
     """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename).
 
     With `async_io` the write goes through the AsyncBpWriter pipeline;
@@ -76,10 +77,14 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
     with a BLOCKING seal — so by the time the .tmp is renamed the step's
     md.idx record is durable either way. `parallel_io=W` instead writes
     through W real writer processes (two-phase commit; the md.idx seal and
-    every subfile/shard fsync precede the rename). `writer_plane` (a
+    every subfile/shard fsync precede the rename), with chunk bytes moved
+    over per-worker shared-memory rings (`transport="shm"`, the default)
+    rather than pickled down queues. `writer_plane` (a
     `repro.core.parallel_engine.WriterPlane`) supplies ALREADY-RUNNING
-    writer processes for the parallel path — the spawn cost is the
-    plane owner's, paid once per run instead of once per save."""
+    writer processes for the parallel path — the spawn cost is the plane
+    owner's, paid once per run instead of once per save, and the plane's
+    rings stay mapped across saves (the plane inherits its own transport;
+    `transport` applies to the spawn-per-save path)."""
     directory = pathlib.Path(str(directory))
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}.bp4"
@@ -94,7 +99,7 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
         from repro.core.parallel_engine import ParallelBpWriter
         w = ParallelBpWriter(tmp, n_io_ranks, cfg,
                              n_writers=parallel_io or None,
-                             plane=writer_plane)
+                             plane=writer_plane, transport=transport)
     elif async_io:
         from repro.core.async_engine import AsyncBpWriter
         w = AsyncBpWriter(tmp, n_io_ranks, cfg)

@@ -34,7 +34,7 @@ class CheckpointManager:
                  n_io_ranks: int = 8,
                  engine_config: EngineConfig = EngineConfig(),
                  async_write: bool = True, engine_async: bool = False,
-                 parallel_io: int = 0):
+                 parallel_io: int = 0, transport: str = "shm"):
         # async_write is what hides checkpoint I/O behind the next train
         # step (the writer thread). engine_async additionally routes the
         # write through AsyncBpWriter — correctness-neutral (checkpoints
@@ -46,7 +46,11 @@ class CheckpointManager:
         # engine_async. The W processes are a PERSISTENT WriterPlane:
         # spawned lazily on the first save and retargeted per checkpoint,
         # so the spawn cost is paid once per run, not once per `every`
-        # steps; `close()` tears the plane down.
+        # steps; with transport="shm" (default) the plane's per-worker
+        # shared-memory rings stay mapped across saves too, so every save
+        # ships leaf chunks by memcpy + header instead of pickling the
+        # whole state down worker queues. `close()` tears the plane down
+        # and unlinks the rings (a finalizer covers abnormal exits).
         self.dir = pathlib.Path(str(directory))
         self.dir.mkdir(parents=True, exist_ok=True)
         self.every = every
@@ -56,6 +60,7 @@ class CheckpointManager:
         self.async_write = async_write
         self.engine_async = engine_async
         self.parallel_io = int(parallel_io)
+        self.transport = transport
         self._plane = None                       # lazy persistent write plane
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -95,7 +100,8 @@ class CheckpointManager:
             self._plane = None
         if self._plane is None:
             from repro.core.parallel_engine import WriterPlane
-            self._plane = WriterPlane(self.parallel_io)
+            self._plane = WriterPlane(self.parallel_io,
+                                      transport=self.transport)
         return self._plane
 
     def save(self, state, step: int, *, force: bool = False):

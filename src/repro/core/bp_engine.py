@@ -181,6 +181,21 @@ class StepSnapshot:
     extra: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+def take_step_snapshot(step: Optional[int], pending: dict, attrs: dict, *,
+                       copy: bool) -> StepSnapshot:
+    """Build one StepSnapshot from a writer's open-step state — the ONE
+    place the snapshot contract lives (every engine's `_take_snapshot`
+    delegates here, so the {dtype, shape, chunks} structure and the
+    `copy=True` deep-copy semantics cannot drift between engines)."""
+    assert step is not None, "end_step() outside begin_step()"
+    if copy:
+        pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
+                          "chunks": [(r, off, np.array(arr))
+                                     for r, off, arr in var["chunks"]]}
+                   for name, var in pending.items()}
+    return StepSnapshot(step, pending, dict(attrs))
+
+
 class BpWriter:
     def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig()):
         self.path = pathlib.Path(str(path))
@@ -238,14 +253,8 @@ class BpWriter:
         """Capture the open step and reset producer-side state. With
         `copy=True` chunk arrays are deep-copied (the async contract: the
         caller may mutate its buffers the moment end_step returns)."""
-        assert self._step is not None, "end_step() outside begin_step()"
-        pending = self._pending
-        if copy:
-            pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
-                              "chunks": [(r, off, np.array(arr))
-                                         for r, off, arr in var["chunks"]]}
-                       for name, var in pending.items()}
-        snap = StepSnapshot(self._step, pending, dict(self._attrs))
+        snap = take_step_snapshot(self._step, self._pending, self._attrs,
+                                  copy=copy)
         self._step = None
         self._pending = {}
         return snap

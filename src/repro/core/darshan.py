@@ -22,6 +22,11 @@ _COUNTER_KEYS = (
     "POSIX_FSYNCS", "POSIX_STATS", "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN",
 )
 _TIME_KEYS = ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME")
+# chunk-transport accounting for the parallel write plane: bytes that moved
+# coordinator->worker through shared-memory rings vs the pickle fallback
+# (recorded by the WORKER, shipped home on its "finished"/"closed" ack and
+# merged — like every other worker-process counter)
+_TRANSPORT_KEYS = ("TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES")
 
 _SIZE_BINS = (100, 1024, 10 * 1024, 100 * 1024, 1024**2, 4 * 1024**2,
               10 * 1024**2, 100 * 1024**2)
@@ -118,7 +123,7 @@ class DarshanMonitor:
                     agg[k] += v
             n = max(n_procs if n_procs else len(ranks), 1)
             per_proc = {k: agg.get(k, 0.0) / n
-                        for k in _COUNTER_KEYS + _TIME_KEYS}
+                        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS}
             return {
                 "n_ranks": len(ranks),
                 "total": dict(agg),
@@ -149,7 +154,7 @@ class DarshanMonitor:
         lines = ["# darshan-style report (repro/core/darshan.py)",
                  f"# nprocs: {n_procs or rep['n_ranks']}", "#"]
         lines.append("# <counter> <value> — job totals")
-        for k in _COUNTER_KEYS + _TIME_KEYS:
+        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS:
             lines.append(f"total_{k}\t{rep['total'].get(k, 0.0):.6f}")
         lines.append("#")
         lines.append("# per-file records")

@@ -29,8 +29,21 @@ flush()": the caller may reuse buffers as soon as flush returns.
 Multi-process I/O: `Series(..., parallel_io=W)` swaps in the
 `repro.core.parallel_engine.ParallelBpWriter` — W REAL writer processes,
 each owning one aggregated subfile, committed per step by a rank-0
-two-phase commit. Mutually exclusive with `async_io`; the on-disk series
-is read-compatible with every other engine.
+two-phase commit. Chunk bytes reach the workers through per-worker
+shared-memory rings by default (`transport="shm"`; `"pickle"` is the
+queue-serialization baseline). The on-disk series is read-compatible
+with every other engine.
+
+Composition: `Series(..., parallel_io=W, async_commit=True)` puts a
+bounded snapshot queue in FRONT of the parallel coordinator — `flush()`
+returns after a deep-copy snapshot and the whole two-phase commit
+(compression, subfile appends, shard votes, md.idx seal) runs behind the
+producer; `drain()` is the durability barrier, exactly as with
+`async_io`. The two flags are validated UP FRONT: `async_io` names the
+single-process pipelined engine, `async_commit` names the parallel
+plane's pipelined commit, and asking for both planes at once
+(`async_io=True, parallel_io=W`) is a `ValueError` pointing at the
+`async_commit` spelling rather than a silently-ignored knob.
 """
 from __future__ import annotations
 
@@ -173,7 +186,8 @@ class Series:
                  engine_config: EngineConfig = EngineConfig(),
                  meta: Optional[dict] = None, async_io: bool = False,
                  queue_depth: int = 2, parallel_io: int = 0,
-                 parallel_read: int = 0):
+                 parallel_read: int = 0, async_commit: bool = False,
+                 transport: str = "shm"):
         self.path = pathlib.Path(str(path))
         self.mode = mode
         self.n_ranks = n_ranks
@@ -181,12 +195,24 @@ class Series:
         # read-side mirror of parallel_io: load_chunk/read_var fan
         # multi-chunk reads over a ReaderPool of this many workers
         self.parallel_read = int(parallel_read)
+        # engine-plane combinations are validated HERE, not at first flush:
+        # a bad combination must fail at construction with the fix named
         if parallel_io and async_io:
             raise ValueError(
-                "async_io and parallel_io are mutually exclusive engines "
-                "(the parallel write plane commits synchronously at "
-                "end_step; overlap comes from its W writer processes)")
+                "async_io=True names the single-process pipelined engine and "
+                "does not stack on the parallel write plane; to overlap the "
+                "producer with the W-process two-phase commit, spell it "
+                f"Series(parallel_io={int(parallel_io)}, async_commit=True)")
+        if async_commit and not parallel_io:
+            raise ValueError(
+                "async_commit=True is the parallel plane's pipelined commit "
+                "and requires parallel_io=W; for the single-process engine "
+                "use async_io=True instead")
+        from repro.core.shm_transport import validate_transport
+        validate_transport(transport)
         self.async_io = async_io
+        self.async_commit = bool(async_commit)
+        self.transport = transport
         self.parallel_io = int(parallel_io)
         self.queue_depth = queue_depth
         self.iterations = _Container(lambda k: Iteration(k, self))
@@ -221,7 +247,10 @@ class Series:
                 from repro.core.parallel_engine import ParallelBpWriter
                 self._writer = ParallelBpWriter(self.path, self.n_ranks,
                                                 self.engine_config,
-                                                n_writers=self.parallel_io)
+                                                n_writers=self.parallel_io,
+                                                transport=self.transport,
+                                                async_commit=self.async_commit,
+                                                queue_depth=self.queue_depth)
             elif self.async_io:
                 from repro.core.async_engine import AsyncBpWriter
                 self._writer = AsyncBpWriter(self.path, self.n_ranks,

@@ -11,8 +11,10 @@ makes the write plane real:
     put() routes chunks by               owns data.<w>   (SubfileSet owned={w})
     aggregator_of(rank, N, W)            owns md.<w>.shard (private metadata)
     end_step():
-      phase 1  PREPARE  ---- chunks ---> compress -> append data.<w>
-                                         -> sealed shard record -> ack
+      phase 1  PREPARE  --- headers ---> view chunk in shm ring
+               (chunk bytes go through      -> compress -> append data.<w>
+               a per-worker ShmRing:        -> sealed shard record -> ack
+               ONE memcpy, no pickle)    (ack doubles as the slot free-list)
                validate every sealed
                shard record (crc) read
                back from md.<w>.shard
@@ -31,10 +33,32 @@ are byte-compatible with the single-process writer, so the reader needs
 ZERO format changes (shards are a writer-side artifact; `md.0` remains
 the reader-visible merged metadata).
 
+Chunk TRANSPORT (`transport=`): the default `"shm"` moves chunk bytes
+through a per-worker `repro.core.shm_transport.ShmRing` — the
+coordinator memcpys each chunk into a shared-memory slot and sends only
+a small `ShmHeader` down the control queue; the worker compresses
+straight from the mapped pages. Slots are freed when the step's ack
+arrives (prepared OR error — the ack is the free-list), so slot contents
+are stable for exactly the life of the step, and a worker dying with a
+slot in flight drops the step like a torn shard, nothing more. Payloads
+that cannot fit the ring (oversized, or a full ring) fall back to the
+`"pickle"` path per chunk — the transport degrades, it never blocks.
+`transport="pickle"` keeps the PR-3 behavior: whole ndarrays pickled
+down the queue (the baseline `bench_parallel_io` sweeps against).
+
+ASYNC COMPOSITION (`async_commit=True`): a bounded snapshot queue (the
+`_PipelinedCommitter` shared with `AsyncBpWriter`) sits in FRONT of the
+coordinator — `end_step()` deep-copies the step and returns immediately;
+a dedicated committer thread runs the full two-phase commit in the
+background. The producer sees neither compression nor commit latency;
+`drain()` is the durability barrier; `fsync_policy="step"` forces a
+blocking seal exactly like the async engine. This is what
+`Series(parallel_io=W, async_commit=True)` wires up.
+
 Worker processes are spawned (never forked — the parent may hold JAX/XLA
-runtime threads) via `launch.distributed.spawn_io_workers`; chunk arrays
-travel down per-worker task queues, so compression + subfile appends +
-shard seals run with W-way real parallelism across processes.
+runtime threads) via `launch.distributed.spawn_io_workers`; control
+messages travel down per-worker task queues, so compression + subfile
+appends + shard seals run with W-way real parallelism across processes.
 
 Shard record format (md.<w>.shard, append-only log):
 
@@ -49,18 +73,27 @@ Persistent plane: a `WriterPlane` spawns W workers ONCE and keeps them
 idle between series; `ParallelBpWriter(..., plane=plane)` retargets them
 ("open") and releases them ("finish") per series, so periodic checkpoint
 writes stop paying W process spawns per save (`CheckpointManager` holds
-one plane for the whole run). On "finished"/"closed" every worker ships
-its own Darshan `MONITOR.snapshot()` back on the ack and the coordinator
-merges it — `parser_dump` in the parent covers the whole write plane.
+one plane for the whole run). The plane also owns the shm rings: they
+stay mapped across saves and are unlinked in `shutdown()` — plus a
+`weakref.finalize` so an abnormal exit leaks nothing in /dev/shm. On
+"finished"/"closed" every worker ships its own Darshan
+`MONITOR.snapshot()` back on the ack (including the new
+`TRANSPORT_SHM_BYTES` / `TRANSPORT_PICKLE_FALLBACK_BYTES` counters) and
+the coordinator merges it — `parser_dump` in the parent covers the whole
+write plane.
 """
 from __future__ import annotations
 
 import json
+import multiprocessing
+import os
 import pathlib
 import queue as _queue
 import struct
+import threading
 import time
 import traceback
+import weakref
 import zlib
 from typing import Any, Optional
 
@@ -68,10 +101,13 @@ import numpy as np
 
 from repro.core import compression as C
 from repro.core.aggregation import SubfileSet, aggregator_of
-from repro.core.bp_engine import (ChunkMeta, EngineConfig, build_md_record,
-                                  chunk_stats, seal_md_record,
+from repro.core.bp_engine import (ChunkMeta, EngineConfig, StepSnapshot,
+                                  build_md_record, chunk_stats,
+                                  seal_md_record, take_step_snapshot,
                                   validate_put_rank)
 from repro.core.darshan import open_file
+from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
+                                      unlink_rings, validate_transport)
 from repro.core.striping import OstPool
 from repro.launch.distributed import spawn_io_workers
 
@@ -112,15 +148,22 @@ def _open_worker_files(path: pathlib.Path, w: int, n_writers: int,
     return subfiles, shard
 
 
-def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
+def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
+                 ring_name: Optional[str] = None):
     """One writer process: owns data.<w> + md.<w>.shard while a series is
     open. With `path_str=None` the worker starts IDLE (a `WriterPlane`
     member) and is retargeted per series via "open"/"finish" — the process
     (spawn cost, imports, page cache) persists across series.
 
+    `ring_name` attaches the worker to its shm transport ring (created by
+    the coordinator/plane); chunk items then arrive as `ShmHeader`s and
+    are read as zero-copy views over the mapped pages. Raw ndarrays in the
+    same items list are the pickle fallback and always accepted.
+
     Protocol (every message is (tag, w, step, payload)):
       in:  ("open", None, (path, n_writers, cfg))  retarget at a new series
-           ("step", step, items)  items = [(name, rank, offset, array), ...]
+           ("step", step, items)  items = [(name, rank, offset, chunk), ...]
+                                  chunk = ndarray | ShmHeader
            ("finish", None, None)  fsync + close files; worker stays alive
            ("close", None, None)   close files (if open) and exit
       out: ("ready", w, None, None)           files open / idle, accepting
@@ -129,14 +172,39 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
            ("finished", w, None, darshan)     files closed; darshan snapshot
            ("closed", w, None, darshan)       exiting; darshan snapshot
 
-    The darshan payload on "finished"/"closed" is the worker's own
-    `MONITOR.snapshot()` (reset after shipping, so a persistent worker
-    ships per-series deltas); the coordinator merges it so `parser_dump`
-    covers the whole write plane.
+    The "prepared"/"error" ack is also the transport FREE-LIST: the
+    coordinator releases the step's ring slots when it arrives (the worker
+    is guaranteed done reading them), so the ring never needs cross-process
+    synchronization. The darshan payload on "finished"/"closed" is the
+    worker's own `MONITOR.snapshot()` (reset after shipping, so a
+    persistent worker ships per-series deltas); the coordinator merges it
+    so `parser_dump` covers the whole write plane.
     """
     from repro.core.darshan import MONITOR
 
+    # orphan watchdog: a coordinator SIGKILLed (or OOM-killed) cannot tell
+    # the workers anything — without this they would block on task_q.get()
+    # forever, pinning their fds AND keeping the shared resource tracker
+    # alive so the transport rings never get unlinked. Exiting on parent
+    # death lets the tracker reap /dev/shm. (No-op when _worker_main runs
+    # as a thread in tests: parent_process() is None in the main process.)
+    parent = multiprocessing.parent_process()
+    if parent is not None:
+        def _exit_with_parent():
+            parent.join()               # returns only when the parent died
+            os._exit(2)
+        threading.Thread(target=_exit_with_parent, daemon=True,
+                         name="jbp-orphan-watchdog").start()
+
     subfiles = shard = None
+    spath = str(path_str) if path_str is not None else ""
+    ring = None
+    if ring_name is not None:
+        try:
+            ring = ShmRing(name=ring_name, create=False)
+        except BaseException:                   # noqa: BLE001
+            result_q.put(("error", w, None, traceback.format_exc()))
+            return
 
     def _teardown():
         nonlocal subfiles, shard
@@ -162,6 +230,7 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
                 _teardown()                     # stale series, if any
                 o_path, o_n, o_cfg = msg[2]
                 n_writers, cfg = o_n, o_cfg
+                spath = str(o_path)
                 subfiles, shard = _open_worker_files(
                     pathlib.Path(o_path), w, n_writers, cfg)
             except BaseException:               # noqa: BLE001
@@ -185,6 +254,8 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
             except BaseException:               # noqa: BLE001
                 pass                            # exiting anyway
             result_q.put(("closed", w, None, MONITOR.snapshot()))
+            if ring is not None:
+                ring.close()
             return
         _, step, items = msg
         if subfiles is None:
@@ -194,8 +265,15 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
         try:
             t0 = time.perf_counter()
             tcomp = 0.0
+            shm_bytes = fallback_bytes = 0
             payloads, metas = [], []
-            for name, rank, offset, arr in items:
+            for name, rank, offset, chunk in items:
+                if isinstance(chunk, ShmHeader):
+                    arr = ring.view(chunk)      # zero-copy: shared pages
+                    shm_bytes += chunk.nbytes
+                else:
+                    arr = chunk                 # pickle path / spill
+                    fallback_bytes += arr.nbytes
                 tc = time.perf_counter()
                 payload = C.array_payload(arr, cfg.codec,
                                           block=cfg.compression_block)
@@ -203,6 +281,15 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
                 payloads.append(payload)
                 metas.append((name, rank, offset, arr.shape, len(payload),
                               chunk_stats(arr)))
+                del arr                         # release any shm view NOW
+            if ring is not None:
+                tkey = f"{spath}/transport"
+                if shm_bytes:
+                    MONITOR.record(w, tkey, "TRANSPORT_SHM_BYTES",
+                                   inc=shm_bytes)
+                if fallback_bytes:
+                    MONITOR.record(w, tkey, "TRANSPORT_PICKLE_FALLBACK_BYTES",
+                                   inc=fallback_bytes)
             base = subfiles.append(w, b"".join(payloads))
             off = base
             chunks: dict[str, list] = {}
@@ -229,6 +316,7 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q):
             info = {"shard_off": rec_off,
                     "shard_len": SHARD_HDR.size + len(blob), "crc": crc,
                     "compress_s": tcomp, "bytes_stored": off - base,
+                    "shm_bytes": shm_bytes, "fallback_bytes": fallback_bytes,
                     "worker_s": time.perf_counter() - t0}
             result_q.put(("prepared", w, step, info))
         except BaseException:                   # noqa: BLE001
@@ -277,6 +365,18 @@ def collect_acks(workers, result_q, kind: str, expect, *,
     return got
 
 
+def _make_rings(n: int, ring_bytes: int) -> list[ShmRing]:
+    """One transport ring per worker, cleaned up as a unit on failure."""
+    rings: list[ShmRing] = []
+    try:
+        for _ in range(n):
+            rings.append(ShmRing(ring_bytes))
+    except BaseException:
+        unlink_rings(rings)
+        raise
+    return rings
+
+
 class WriterPlane:
     """W persistent writer processes, reusable across series.
 
@@ -286,15 +386,30 @@ class WriterPlane:
     plane, not once per series. This is what makes periodic parallel
     checkpoints cheap: `CheckpointManager` keeps one plane alive for the
     whole run instead of spawning W processes every `every` steps.
+
+    The plane also owns the shm transport rings (`transport="shm"`): one
+    per worker, mapped for the plane's whole life, so repeated checkpoint
+    saves reuse the same shared pages. `shutdown()` unlinks them, and a
+    `weakref.finalize` guarantees the unlink even when the plane is
+    leaked or the process dies with an unhandled exception.
     """
 
-    def __init__(self, n_writers: int, *, ack_timeout: float = 300.0):
+    def __init__(self, n_writers: int, *, ack_timeout: float = 300.0,
+                 transport: str = "shm",
+                 ring_bytes: int = DEFAULT_RING_BYTES):
+        validate_transport(transport)
         self.m = max(1, int(n_writers))
         self.ack_timeout = ack_timeout
+        self.transport = transport
         self._shut = False
+        self.rings: list[ShmRing] = (
+            _make_rings(self.m, ring_bytes) if transport == "shm" else [])
+        self._ring_finalizer = weakref.finalize(
+            self, unlink_rings, list(self.rings))
+        ring_names = [r.name for r in self.rings] or [None] * self.m
         self.workers, self.result_q = spawn_io_workers(
             self.m, _worker_main,
-            lambda i, tq, rq: (i, None, self.m, None, tq, rq))
+            lambda i, tq, rq: (i, None, self.m, None, tq, rq, ring_names[i]))
         try:       # idle-ready handshake: every process is up and listening
             collect_acks(self.workers, self.result_q, "ready", range(self.m),
                          timeout=self.ack_timeout)
@@ -310,7 +425,7 @@ class WriterPlane:
 
     def shutdown(self, _collect: bool = True):
         """Exit every worker; merge their Darshan counters into this
-        process's MONITOR (idempotent)."""
+        process's MONITOR; unlink the transport rings (idempotent)."""
         if self._shut:
             return
         self._shut = True
@@ -328,10 +443,13 @@ class WriterPlane:
                     MONITOR.merge(snap)
             except BaseException:               # noqa: BLE001
                 pass                            # best effort on teardown
-        for p, _ in self.workers:
+        for p, tq in self.workers:
+            tq.close()
             p.join(timeout=10.0)
             if p.is_alive():
                 p.terminate()
+                p.join(timeout=5.0)             # reap: no zombie PID entry
+        self._ring_finalizer()                  # close + unlink every ring
 
     def __enter__(self):
         return self
@@ -344,15 +462,24 @@ class ParallelBpWriter:
     """BpWriter-protocol writer backed by W real writer processes.
 
     Drop-in for `BpWriter` on the producer side (begin_step/put/
-    set_attribute/end_step/close; `drain()` is a no-op — end_step is the
-    commit barrier). The number of aggregators equals the number of writer
-    processes: each process owns its subfile outright, which is what makes
-    the plane coordination-free between commits.
+    set_attribute/end_step/close). The number of aggregators equals the
+    number of writer processes: each process owns its subfile outright,
+    which is what makes the plane coordination-free between commits.
+
+    `transport="shm"` (default) moves chunk bytes through per-worker
+    shared-memory rings; `"pickle"` is the queue-serialization baseline.
+    `async_commit=True` pipelines the whole two-phase commit behind a
+    bounded snapshot queue: `end_step()` returns after a deep-copy
+    snapshot, `drain()` is the durability barrier (otherwise `drain()` is
+    a no-op — the sync `end_step` is its own commit barrier).
     """
 
     def __init__(self, path, n_ranks: int, cfg: EngineConfig = EngineConfig(),
                  *, n_writers: Optional[int] = None, ack_timeout: float = 300.0,
-                 plane: Optional[WriterPlane] = None):
+                 plane: Optional[WriterPlane] = None, transport: str = "shm",
+                 ring_bytes: int = DEFAULT_RING_BYTES,
+                 async_commit: bool = False, queue_depth: int = 2):
+        validate_transport(transport)
         self.path = pathlib.Path(str(path))
         self.path.mkdir(parents=True, exist_ok=True)
         self.cfg = cfg
@@ -361,8 +488,11 @@ class ParallelBpWriter:
         self.m = min(max(1, int(w)), max(n_ranks, 1))
         if plane is not None:
             self.m = min(self.m, plane.m)
+            # the plane owns worker processes AND rings: inherit its mode
+            transport = plane.transport
         self.ack_timeout = ack_timeout
         self._plane = plane
+        self.async_commit = bool(async_commit)
         if cfg.stripe is not None:
             OstPool(self.path, cfg.n_osts)      # create ost dirs up front
             for i in range(self.m):
@@ -378,22 +508,31 @@ class ParallelBpWriter:
         self._profile: list[dict] = []
         self._closed = False
         self._crash_after_prepare = False       # test hook: torn-commit sim
+        self._rings: list[ShmRing] = []
+        self._ring_finalizer = None
         try:
             if plane is not None:
                 # retarget the persistent plane's first m workers at this
-                # series; spawn cost is NOT paid here
+                # series; spawn cost is NOT paid here, rings are the plane's
                 self._workers, self._result_q = plane.workers, plane.result_q
+                self._rings = plane.rings[:self.m]
                 for wid in range(self.m):
                     self._workers[wid][1].put(
                         ("open", None, (str(self.path), self.m, cfg)))
             else:
+                if transport == "shm":
+                    self._rings = _make_rings(self.m, ring_bytes)
+                    self._ring_finalizer = weakref.finalize(
+                        self, unlink_rings, list(self._rings))
+                ring_names = [r.name for r in self._rings] or [None] * self.m
                 self._workers, self._result_q = spawn_io_workers(
                     self.m, _worker_main,
-                    lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq))
+                    lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq,
+                                       ring_names[i]))
             self._collect("ready", range(self.m))   # spawn/open failures here
         except BaseException:
-            # a failed bring-up must not leak the md handles OR the
-            # workers that DID come up (they would block on task_q.get
+            # a failed bring-up must not leak the md handles, the rings, OR
+            # the workers that DID come up (they would block on task_q.get
             # holding their subfile/shard fds until parent exit); a
             # borrowed plane is left alive — its workers stay idle-usable
             self._md.close()
@@ -403,7 +542,19 @@ class ParallelBpWriter:
                     if p.is_alive():
                         p.terminate()
                     p.join(timeout=2.0)
+                if self._ring_finalizer is not None:
+                    self._ring_finalizer()
             raise
+        self.transport = "shm" if self._rings else "pickle"
+        # the pipelined committer sits in FRONT of the coordinator: it owns
+        # the two-phase commit ordering exactly like AsyncBpWriter's seal
+        # thread owns md.0/md.idx ordering
+        self._committer = None
+        if self.async_commit:
+            from repro.core.async_engine import _PipelinedCommitter
+            self._committer = _PipelinedCommitter(
+                self._commit_step, queue_depth=queue_depth,
+                name="jbp-parallel-commit")
 
     # ------------------------------------------------------------------ step
     def begin_step(self, step: int):
@@ -425,6 +576,16 @@ class ParallelBpWriter:
             "chunks": []})
         assert var["shape"] == tuple(int(x) for x in global_shape), name
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
+
+    def _take_snapshot(self, *, copy: bool) -> StepSnapshot:
+        """Capture the open step and reset producer-side state (the shared
+        bp_engine snapshot contract: `copy=True` deep-copies chunk arrays
+        so an async producer may reuse its buffers immediately)."""
+        snap = take_step_snapshot(self._step, self._pending, self._attrs,
+                                  copy=copy)
+        self._step = None
+        self._pending = {}
+        return snap
 
     # ----------------------------------------------------------- ack plumbing
     def _collect(self, kind: str, expect, step: Optional[int] = None) -> dict:
@@ -450,27 +611,62 @@ class ParallelBpWriter:
         return json.loads(blob)
 
     # ------------------------------------------------------------------ commit
-    def end_step(self) -> dict:
-        assert self._step is not None, "end_step() outside begin_step()"
-        step = self._step
-        pending = self._pending
-        self._step = None
-        self._pending = {}
+    def end_step(self, blocking: bool = False) -> dict:
+        """Sync mode: run the two-phase commit inline (the commit barrier).
+        `async_commit` mode: snapshot + enqueue; `blocking=True` (forced by
+        fsync_policy="step") waits for the background seal instead."""
+        if self._committer is None:
+            return self._commit_step(self._take_snapshot(copy=False))
+        if self.cfg.fsync_policy == "step":
+            blocking = True            # durable seal must precede the return
+        snap = self._take_snapshot(copy=not blocking)
+        return self._committer.submit(snap, blocking=blocking)
+
+    def _commit_step(self, snap: StepSnapshot) -> dict:
+        step = snap.step
         t0 = time.perf_counter()
 
         by_w: dict[int, list] = {}
         n_bytes_raw = 0
-        for name, var in pending.items():
+        for name, var in snap.pending.items():
             for rank, offset, arr in var["chunks"]:
                 n_bytes_raw += arr.nbytes
                 wid = aggregator_of(rank, self.n_ranks, self.m)
                 by_w.setdefault(wid, []).append((name, rank, offset, arr))
 
-        # ---- phase 1: PREPARE — fan chunks out, await sealed-shard votes
-        for wid, items in by_w.items():
-            self._workers[wid][1].put(("step", step, items))
-        acks = self._collect("prepared", by_w, step=step)
-        merged: dict[str, list] = {name: [] for name in pending}
+        # ---- phase 1: PREPARE — fan chunks out, await sealed-shard votes.
+        # shm transport: ONE memcpy into the worker's ring per chunk, only
+        # the header crosses the queue; a chunk the ring cannot hold right
+        # now falls back to pickling that one array (never blocks).
+        shm_slots: dict[int, list[int]] = {}
+        shm_bytes = fallback_bytes = 0
+        try:
+            for wid, items in by_w.items():
+                ring = self._rings[wid] if self._rings else None
+                wire_items = []
+                for name, rank, offset, arr in items:
+                    hdr = ring.write_array(arr) if ring is not None else None
+                    if hdr is not None:
+                        shm_slots.setdefault(wid, []).append(hdr.offset)
+                        shm_bytes += arr.nbytes
+                        wire_items.append((name, rank, offset, hdr))
+                    else:
+                        if ring is not None:
+                            fallback_bytes += arr.nbytes
+                        wire_items.append((name, rank, offset, arr))
+                self._workers[wid][1].put(("step", step, wire_items))
+            acks = self._collect("prepared", by_w, step=step)
+        finally:
+            # the ack (prepared OR error OR abort) is the free-list: the
+            # step is resolved, the worker is done (or dead) — reclaim its
+            # slots in allocation order. An aborted step's slots may still
+            # be read by a straggling worker, but that step is never
+            # committed, so the garbage it might produce is torn-shard
+            # dead weight by construction.
+            for wid, offs in shm_slots.items():
+                for off in offs:
+                    self._rings[wid].free(off)
+        merged: dict[str, list] = {name: [] for name in snap.pending}
         for wid in sorted(acks):
             rec = self._read_shard_record(wid, acks[wid], step)
             for name, chunk_list in rec["chunks"].items():
@@ -484,7 +680,7 @@ class ParallelBpWriter:
         # ---- phase 2: COMMIT — merge shard chunk tables into md.0/md.idx
         # (record layout and seal ordering live in bp_engine so every
         # engine commits identically — byte parity is not re-implemented)
-        md_rec = build_md_record(step, dict(self._attrs), pending, merged)
+        md_rec = build_md_record(step, snap.attrs, snap.pending, merged)
         blob = json.dumps(md_rec).encode()
         self._md_off = seal_md_record(
             self._md, self._idx, self._md_off, step, blob,
@@ -496,20 +692,48 @@ class ParallelBpWriter:
                 "compress_s": sum(a["compress_s"] for a in acks.values()),
                 "bytes_raw": n_bytes_raw,
                 "bytes_stored": sum(a["bytes_stored"] for a in acks.values()),
+                "transport": self.transport,
+                "transport_shm_bytes": shm_bytes,
+                "transport_pickle_bytes": (fallback_bytes if self._rings
+                                           else n_bytes_raw),
                 "aggregators": self.m, "writers": self.m,
                 "worker_s": {str(wid): acks[wid]["worker_s"]
                              for wid in sorted(acks)}}
+        prof.update(snap.extra)
         self._profile.append(prof)
         return prof
 
     def drain(self):
-        """No-op barrier: end_step() already commits synchronously."""
+        """Durability barrier. Sync mode: no-op (end_step() already commits
+        synchronously). async_commit: block until every queued step's
+        md.idx record is sealed per the fsync policy."""
+        if self._committer is not None:
+            self._committer.drain()
 
     # ------------------------------------------------------------------ close
     def _profile_doc(self) -> dict:
-        return {"engine": "JBP(BP4-parallel)", "aggregators": self.m,
-                "writers": self.m, "codec": self.cfg.codec,
-                "steps": self._profile}
+        doc = {"engine": "JBP(BP4-parallel)", "aggregators": self.m,
+               "writers": self.m, "codec": self.cfg.codec,
+               "transport": self.transport, "steps": self._profile}
+        if self._committer is not None:
+            doc["async"] = self._committer.profile_block(self._profile)
+        return doc
+
+    def overlap_stats(self) -> dict:
+        """Live view of the commit-overlap accounting (async_commit)."""
+        doc = self._profile_doc()
+        return dict(doc.get("async", {}), steps=len(self._profile))
+
+    def _drain_stale_acks(self):
+        """Throw away unconsumed result-queue messages (acks of aborted
+        steps) so worker feeder threads are never wedged on a full pipe at
+        exit — part of the close-cannot-hang contract. Owned-queue path
+        only: a plane's queue outlives this writer."""
+        try:
+            while True:
+                self._result_q.get_nowait()
+        except _queue.Empty:
+            pass
 
     def close(self):
         if self._closed:
@@ -517,6 +741,11 @@ class ParallelBpWriter:
         self._closed = True
         from repro.core.darshan import MONITOR
         errors: list[BaseException] = []
+        if self._committer is not None:
+            try:
+                self._committer.shutdown()      # drain; never raises early
+            except BaseException as e:          # noqa: BLE001
+                errors.append(e)
         if self._plane is not None:
             # release, don't kill: workers fsync+close this series' files
             # and go back to idle — the plane is reusable immediately
@@ -541,8 +770,19 @@ class ParallelBpWriter:
                     MONITOR.merge(snap)
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
-            for p, _ in self._workers:
+            # a worker that died mid-step (or is wedged) must not turn
+            # close() into a hang: drain stale acks so exiting workers can
+            # flush their feeder threads, close the task queues, and
+            # terminate anything join() cannot reap
+            self._drain_stale_acks()
+            for p, tq in self._workers:
+                tq.close()
                 p.join(timeout=10.0)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5.0)
+            if self._ring_finalizer is not None:
+                self._ring_finalizer()          # close + unlink every ring
         if self.cfg.fsync_policy != "step":
             self._md.fsync()
             self._idx.fsync()
@@ -551,11 +791,19 @@ class ParallelBpWriter:
         if self.cfg.profiling:
             with open_file(self.path / "profiling.json", "w", rank=0) as f:
                 f.write(json.dumps(self._profile_doc(), indent=1))
+        if self._committer is not None:
+            self._committer.check_error()       # background commit failures
         if errors:
             raise errors[0]
 
     def __enter__(self):
         return self
 
-    def __exit__(self, *a):
-        self.close()
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+            return
+        try:
+            self.close()
+        except BaseException:                   # noqa: BLE001
+            pass       # the in-flight exception is the root cause; keep it

@@ -171,10 +171,13 @@ def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
     """Series for BIT1-style diagnostic output, async by default so dumps
     never stall the push/deposit loop.
 
-    `parallel_io=W` opts in to the multi-process write plane instead: W
-    real writer processes stream into W aggregated subfiles (compression
-    and subfile appends leave this process entirely), each dump committed
-    by a two-phase commit at end_step. Overrides async_io."""
+    `parallel_io=W` opts in to the multi-process write plane: W real
+    writer processes stream into W aggregated subfiles (compression and
+    subfile appends leave this process entirely, chunks shipped over
+    shared-memory rings), each dump committed by a two-phase commit. The
+    async default COMPOSES with it — the commit runs behind a bounded
+    snapshot queue (`async_commit`), so the push/deposit loop sees
+    neither compression nor commit latency."""
     from repro.core.bp_engine import EngineConfig
     from repro.core.openpmd import Series
     if engine_config is None:
@@ -182,7 +185,8 @@ def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
                                      codec="blosc")
     if parallel_io:
         return Series(path, "w", n_ranks=n_io_ranks,
-                      engine_config=engine_config, parallel_io=parallel_io)
+                      engine_config=engine_config, parallel_io=parallel_io,
+                      async_commit=async_io, queue_depth=queue_depth)
     return Series(path, "w", n_ranks=n_io_ranks, engine_config=engine_config,
                   async_io=async_io, queue_depth=queue_depth)
 

@@ -345,10 +345,25 @@ def test_series_parallel_io_roundtrip(tmpdir_path):
         r.read_var(0, "/data/0/meshes/density"), arr)
 
 
-def test_series_rejects_async_plus_parallel(tmpdir_path):
+def test_series_validates_plane_combinations_up_front(tmpdir_path):
+    """Bad engine-plane combinations must fail AT CONSTRUCTION with the
+    correct spelling named — not silently pick one plane or raise at the
+    first flush."""
     from repro.core.openpmd import Series
-    with pytest.raises(ValueError, match="mutually exclusive"):
+
+    # stacking the single-process async engine on the parallel plane:
+    # the error must point at the async_commit composition
+    with pytest.raises(ValueError,
+                       match=r"Series\(parallel_io=2, async_commit=True\)"):
         Series(tmpdir_path / "d.bp4", "w", async_io=True, parallel_io=2)
+    # async_commit without a parallel plane to pipeline
+    with pytest.raises(ValueError, match="requires parallel_io"):
+        Series(tmpdir_path / "d.bp4", "w", async_commit=True)
+    # nothing above may have constructed a writer (and truncated md.0)
+    assert not (tmpdir_path / "d.bp4" / "md.0").exists()
+    # unknown transport spelling
+    with pytest.raises(ValueError, match="unknown transport"):
+        Series(tmpdir_path / "d.bp4", "w", parallel_io=2, transport="tcp")
 
 
 def test_checkpoint_parallel_io_roundtrip(tmpdir_path):
