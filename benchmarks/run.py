@@ -24,11 +24,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_aggregators, bench_async_io,
                             bench_compression, bench_darshan_costs,
-                            bench_insitu, bench_ior, bench_kernels,
-                            bench_openpmd_io, bench_original_io,
-                            bench_parallel_io, bench_perf_io,
-                            bench_reader_pool, bench_repack, bench_restart,
-                            bench_roofline, bench_striping)
+                            bench_insitu, bench_ior, bench_jbpd,
+                            bench_kernels, bench_openpmd_io,
+                            bench_original_io, bench_parallel_io,
+                            bench_perf_io, bench_reader_pool, bench_repack,
+                            bench_restart, bench_roofline, bench_striping)
 
     quick = args.quick
     sections = [
@@ -65,6 +65,9 @@ def main(argv=None) -> None:
             parallel_counts=(1, 2) if quick else (1, 2, 4),
             bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,
             steps=2 if quick else 3, repeats=2 if quick else 3)),
+        ("jbpd", lambda: bench_jbpd.run(
+            n_clients=4, bytes_per_rank=1 * 1024**2 if quick else 2 * 1024**2,
+            repeats=4 if quick else 6)),
         ("repack", lambda: bench_repack.run(
             w_dst_counts=(1,) if quick else (1, 2),
             bytes_per_rank=512 * 1024 if quick else 1 * 1024**2,

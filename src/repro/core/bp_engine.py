@@ -187,7 +187,8 @@ def take_step_snapshot(step: Optional[int], pending: dict, attrs: dict, *,
     place the snapshot contract lives (every engine's `_take_snapshot`
     delegates here, so the {dtype, shape, chunks} structure and the
     `copy=True` deep-copy semantics cannot drift between engines)."""
-    assert step is not None, "end_step() outside begin_step()"
+    if step is None:
+        raise RuntimeError("end_step() outside begin_step()")
     if copy:
         pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
                           "chunks": [(r, off, np.array(arr))
@@ -223,7 +224,10 @@ class BpWriter:
 
     # ------------------------------------------------------------------ step
     def begin_step(self, step: int):
-        assert self._step is None, "previous step not closed"
+        if self._step is not None:
+            raise RuntimeError(
+                f"begin_step({step}) while step {self._step} is still open "
+                f"(previous step not closed — call end_step() first)")
         self._step = step
         self._pending = {}
 
@@ -240,13 +244,17 @@ class BpWriter:
     def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
             offset: tuple, rank: int):
         """Register one rank's chunk of variable `name` for this step."""
-        assert self._step is not None, "put() outside begin/end_step"
+        if self._step is None:
+            raise RuntimeError("put() outside begin/end_step")
         validate_put_rank(rank, self.n_ranks)
         a = np.ascontiguousarray(array)
+        gshape = tuple(int(x) for x in global_shape)
         var = self._pending.setdefault(name, {
-            "dtype": a.dtype.str, "shape": tuple(int(x) for x in global_shape),
-            "chunks": []})
-        assert var["shape"] == tuple(int(x) for x in global_shape), name
+            "dtype": a.dtype.str, "shape": gshape, "chunks": []})
+        if var["shape"] != gshape:
+            raise ValueError(
+                f"put({name!r}) global_shape {gshape} conflicts with "
+                f"{var['shape']} from an earlier put of this step")
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
 
     def _take_snapshot(self, *, copy: bool) -> StepSnapshot:
@@ -382,9 +390,16 @@ class BpReader:
         constructor sets the default for every read.
     """
 
-    def __init__(self, path, *, parallel: int = 0):
+    def __init__(self, path, *, parallel: int = 0, chunk_cache=None):
         self.path = pathlib.Path(str(path))
         self.default_parallel = int(parallel)
+        # Service-plane hook: an object with
+        #     get_or_fetch(key, fetch, nbytes) -> np.ndarray
+        # consulted by `read_chunk` for every decompressed chunk (key =
+        # (series, step, var, agg, file_offset) — chunk-granular, exactly
+        # what jbpd's LRU cache and request coalescing key on). None (the
+        # default) reads and decompresses inline, as ever.
+        self.chunk_cache = chunk_cache
         self._blobs: dict[int, bytes] = {}        # step -> validated md.0 blob
         self._meta: dict[int, dict] = {}          # step -> parsed record cache
         self.idx_records: dict[int, dict] = {}    # step -> md.idx fields
@@ -657,15 +672,38 @@ class BpReader:
     def __exit__(self, *a):
         self.close()
 
-    def _scatter_chunk(self, out: np.ndarray, dtype, sel_off: tuple,
-                       ch: ChunkMeta, box, local: bool):
-        """Read one chunk's payload, decompress, scatter into `out`. The
-        unit of work of both read paths; `local=True` uses the per-thread
-        handle (ReaderPool workers), else the shared locked handle."""
-        lo, hi = box
+    def _fetch_chunk(self, ch: ChunkMeta, dtype, local: bool) -> np.ndarray:
+        """Uncached read+decompress of one stored chunk (`local=True` uses
+        the per-thread handle — the ReaderPool path)."""
         read = self._read_payload_local if local else self._read_payload
         payload = read(ch.agg, ch.file_offset, ch.nbytes)
-        arr = C.payload_to_array(payload, dtype, ch.extent)
+        return C.payload_to_array(payload, dtype, ch.extent)
+
+    def read_chunk(self, step: int, name: str, ch: ChunkMeta, *,
+                   dtype=None, local: bool = False) -> np.ndarray:
+        """Decompressed array of ONE stored chunk — the chunk-granular read
+        entrypoint. When a `chunk_cache` is installed (the jbpd service
+        plane) the chunk is looked up / fetched through it, keyed by
+        (series, step, var, agg, file_offset): concurrent identical
+        requests share one payload read + decompress, repeats are memory
+        hits. Cached arrays are read-only; callers needing to mutate copy."""
+        if dtype is None:
+            dtype = np.dtype(self.var_info(step, name)["dtype"])
+        if self.chunk_cache is None:
+            return self._fetch_chunk(ch, dtype, local)
+        key = (str(self.path), step, name, ch.agg, ch.file_offset)
+        n = int(np.prod(ch.extent, dtype=np.int64)) * dtype.itemsize
+        return self.chunk_cache.get_or_fetch(
+            key, lambda: self._fetch_chunk(ch, dtype, local), n)
+
+    def _scatter_chunk(self, out: np.ndarray, dtype, sel_off: tuple,
+                       step: int, name: str, ch: ChunkMeta, box, local: bool):
+        """Read one chunk (through `read_chunk`, so the service cache sees
+        every read path), scatter its intersection into `out`. The unit of
+        work of both read paths; `local=True` uses the per-thread handle
+        (ReaderPool workers), else the shared locked handle."""
+        lo, hi = box
+        arr = self.read_chunk(step, name, ch, dtype=dtype, local=local)
         src = tuple(slice(l - o, h - o)
                     for l, o, h in zip(lo, ch.offset, hi))
         dst = tuple(slice(l - o, h - o)
@@ -702,9 +740,10 @@ class BpReader:
             batch = pool.batch()
             for ch, box in plan:
                 pool.submit(ch.agg, self._scatter_chunk, out, dtype, sel_off,
-                            ch, box, True, batch=batch)
+                            step, name, ch, box, True, batch=batch)
             pool.drain_batch(batch)
         else:
             for ch, box in plan:
-                self._scatter_chunk(out, dtype, sel_off, ch, box, False)
+                self._scatter_chunk(out, dtype, sel_off, step, name, ch, box,
+                                    False)
         return out

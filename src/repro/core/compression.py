@@ -31,6 +31,16 @@ CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
 DEFAULT_BLOCK = 1 * 1024 * 1024
 
 
+class CorruptPayloadError(ValueError):
+    """A stored payload failed validation while decoding: bad JBPC magic,
+    truncated header/payload slice, unknown codec id, a codec stream the
+    decompressor rejects, or a decompressed length that does not match the
+    header. This is a REAL exception, not an `assert` — bit rot must be
+    diagnosed identically under `python -O`, and service-plane callers
+    (jbpd, jbpfsck-style deep scans) map it to a clean error response
+    instead of surfacing garbage data or an opaque unpack traceback."""
+
+
 def byte_shuffle(buf, itemsize: int) -> bytes:
     """[n, itemsize] byte-matrix transpose (Blosc's shuffle filter)."""
     if itemsize <= 1 or len(buf) % itemsize:
@@ -74,20 +84,41 @@ def _compress_block(block, codec: str, itemsize: int) -> bytes:
 
 
 def _decompress_block(buf: bytes, off: int) -> tuple[bytes, int]:
+    if off + HEADER.size > len(buf):
+        raise CorruptPayloadError(
+            f"truncated block header at offset {off}: "
+            f"{len(buf) - off} bytes left, {HEADER.size} needed")
     magic, cid, itemsize, _, raw, comp = HEADER.unpack_from(buf, off)
-    assert magic == MAGIC, "corrupt block header"
+    if magic != MAGIC:
+        raise CorruptPayloadError(
+            f"bad block magic at offset {off}: {magic!r} != {MAGIC!r} "
+            f"(corrupt or misaligned payload)")
     start = off + HEADER.size
+    if start + comp > len(buf):
+        raise CorruptPayloadError(
+            f"truncated block payload at offset {start}: header promises "
+            f"{comp} bytes, {len(buf) - start} present")
     payload = buf[start:start + comp]
-    codec = CODEC_NAMES[cid]
-    if codec == "none":
-        out = payload
-    elif codec == "blosc":
-        out = byte_unshuffle(zlib.decompress(payload), itemsize)
-    elif codec == "zlib":
-        out = zlib.decompress(payload)
-    else:
-        out = bz2.decompress(payload)
-    assert len(out) == raw
+    codec = CODEC_NAMES.get(cid)
+    if codec is None:
+        raise CorruptPayloadError(
+            f"unknown codec id {cid} in block header at offset {off}")
+    try:
+        if codec == "none":
+            out = payload
+        elif codec == "blosc":
+            out = byte_unshuffle(zlib.decompress(payload), itemsize)
+        elif codec == "zlib":
+            out = zlib.decompress(payload)
+        else:
+            out = bz2.decompress(payload)
+    except (zlib.error, OSError, ValueError) as e:
+        raise CorruptPayloadError(
+            f"{codec} stream at offset {start} failed to decode: {e}") from e
+    if len(out) != raw:
+        raise CorruptPayloadError(
+            f"decompressed length mismatch at offset {off}: header promises "
+            f"{raw} raw bytes, stream decoded to {len(out)}")
     return out, start + comp
 
 
@@ -121,4 +152,10 @@ def array_payload(arr: np.ndarray, codec: str,
 
 
 def payload_to_array(buf: bytes, dtype, shape) -> np.ndarray:
-    return np.frombuffer(decompress(buf), dtype=dtype).reshape(shape)
+    raw = decompress(buf)
+    try:
+        return np.frombuffer(raw, dtype=dtype).reshape(shape)
+    except ValueError as e:
+        raise CorruptPayloadError(
+            f"decoded payload ({len(raw)} bytes) does not fit a "
+            f"{np.dtype(dtype)} array of shape {tuple(shape)}: {e}") from e

@@ -27,6 +27,13 @@ _TIME_KEYS = ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME")
 # (recorded by the WORKER, shipped home on its "finished"/"closed" ack and
 # merged — like every other worker-process counter)
 _TRANSPORT_KEYS = ("TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES")
+# served-read accounting for the jbpd data service: decompressed-chunk
+# cache hits/misses, requests that COALESCED onto another client's
+# in-flight fetch instead of reading+decompressing again, and response
+# bytes handed off zero-copy through an ShmRing vs framed down the socket
+_SERVICE_KEYS = ("SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS",
+                 "SERVICE_COALESCED", "SERVICE_SHM_BYTES",
+                 "SERVICE_SOCKET_BYTES")
 
 _SIZE_BINS = (100, 1024, 10 * 1024, 100 * 1024, 1024**2, 4 * 1024**2,
               10 * 1024**2, 100 * 1024**2)
@@ -123,7 +130,8 @@ class DarshanMonitor:
                     agg[k] += v
             n = max(n_procs if n_procs else len(ranks), 1)
             per_proc = {k: agg.get(k, 0.0) / n
-                        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS}
+                        for k in (_COUNTER_KEYS + _TIME_KEYS +
+                                  _TRANSPORT_KEYS + _SERVICE_KEYS)}
             return {
                 "n_ranks": len(ranks),
                 "total": dict(agg),
@@ -154,7 +162,7 @@ class DarshanMonitor:
         lines = ["# darshan-style report (repro/core/darshan.py)",
                  f"# nprocs: {n_procs or rep['n_ranks']}", "#"]
         lines.append("# <counter> <value> — job totals")
-        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS:
+        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS + _SERVICE_KEYS:
             lines.append(f"total_{k}\t{rep['total'].get(k, 0.0):.6f}")
         lines.append("#")
         lines.append("# per-file records")

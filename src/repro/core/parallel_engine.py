@@ -558,7 +558,10 @@ class ParallelBpWriter:
 
     # ------------------------------------------------------------------ step
     def begin_step(self, step: int):
-        assert self._step is None, "previous step not closed"
+        if self._step is not None:
+            raise RuntimeError(
+                f"begin_step({step}) while step {self._step} is still open "
+                f"(previous step not closed — call end_step() first)")
         self._step = step
         self._pending = {}
 
@@ -568,13 +571,17 @@ class ParallelBpWriter:
     def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
             offset: tuple, rank: int):
         """Register one rank's chunk of variable `name` for this step."""
-        assert self._step is not None, "put() outside begin/end_step"
+        if self._step is None:
+            raise RuntimeError("put() outside begin/end_step")
         validate_put_rank(rank, self.n_ranks)
         a = np.ascontiguousarray(array)
+        gshape = tuple(int(x) for x in global_shape)
         var = self._pending.setdefault(name, {
-            "dtype": a.dtype.str, "shape": tuple(int(x) for x in global_shape),
-            "chunks": []})
-        assert var["shape"] == tuple(int(x) for x in global_shape), name
+            "dtype": a.dtype.str, "shape": gshape, "chunks": []})
+        if var["shape"] != gshape:
+            raise ValueError(
+                f"put({name!r}) global_shape {gshape} conflicts with "
+                f"{var['shape']} from an earlier put of this step")
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
 
     def _take_snapshot(self, *, copy: bool) -> StepSnapshot:

@@ -58,6 +58,12 @@ class ReaderPool:
         self._stop = False
         self._error: Optional[BaseException] = None   # batch-less tasks
         self._threads: list[threading.Thread] = []
+        # worker wake-ups since construction. Waits are purely
+        # notification-driven (submit/finish/stop notify; NO wait timeout),
+        # so an idle pool must show ZERO wakeups — a daemon hosting a
+        # resident pool sits at 0% CPU between requests. The counter is the
+        # observable that keeps it that way (tests assert on it).
+        self.wakeups = 0
         self.ensure(max(1, int(n_workers)))
 
     @property
@@ -115,7 +121,8 @@ class ReaderPool:
             with self._cond:
                 task = self._take(i)
                 while task is None and not self._stop:
-                    self._cond.wait(timeout=0.1)
+                    self._cond.wait()         # notification-driven: no spin
+                    self.wakeups += 1
                     task = self._take(i)
                 if task is None:              # stopped and drained
                     return
@@ -142,7 +149,7 @@ class ReaderPool:
         (another caller's failures are invisible here, and vice versa)."""
         with self._cond:
             while batch.outstanding:
-                self._cond.wait(timeout=0.1)
+                self._cond.wait()
             err, batch.error = batch.error, None
         if err is not None:
             raise err
@@ -153,7 +160,7 @@ class ReaderPool:
         usable)."""
         with self._cond:
             while self._outstanding:
-                self._cond.wait(timeout=0.1)
+                self._cond.wait()
             err, self._error = self._error, None
         if err is not None:
             raise err

@@ -41,6 +41,7 @@ abnormal exit.
 from __future__ import annotations
 
 import secrets
+import threading
 from collections import deque
 from multiprocessing import shared_memory
 from typing import NamedTuple, Optional
@@ -49,6 +50,12 @@ import numpy as np
 
 MIN_SLOT = 4096                      # one page: below this, pickle wins anyway
 DEFAULT_RING_BYTES = 64 * 1024 ** 2  # per-worker ring; ~2 steps of 8x4MiB ranks
+
+# serializes the attach-side resource-tracker register suppression below:
+# two threads attaching concurrently (jbpd clients attach per-connection
+# response rings) would otherwise race the save/restore and could leave the
+# no-op register installed process-wide
+_ATTACH_LOCK = threading.Lock()
 
 
 class ShmHeader(NamedTuple):
@@ -107,12 +114,13 @@ class ShmRing:
             # register during attach is the one behavior that is correct in
             # both topologies; the owner's registration stays authoritative.
             from multiprocessing import resource_tracker
-            real_register = resource_tracker.register
-            resource_tracker.register = lambda *a, **k: None
-            try:
-                self._shm = shared_memory.SharedMemory(name=name)
-            finally:
-                resource_tracker.register = real_register
+            with _ATTACH_LOCK:
+                real_register = resource_tracker.register
+                resource_tracker.register = lambda *a, **k: None
+                try:
+                    self._shm = shared_memory.SharedMemory(name=name)
+                finally:
+                    resource_tracker.register = real_register
             # populate this process's page table for the whole mapping (a
             # read suffices: the owner already allocated the pages) — the
             # attach side of the same cold-start avoidance as above
@@ -124,6 +132,19 @@ class ShmRing:
         # live segments in allocation order: (offset, slot_len, is_pad)
         self._segments: deque[tuple[int, int, bool]] = deque()
         self._unlinked = False
+
+    @classmethod
+    def attach(cls, name: str, *, min_slot: int = MIN_SLOT) -> "ShmRing":
+        """Map an EXISTING ring by name from a process that is NOT a child
+        of the owner — the jbpd client topology: the daemon owns per-client
+        response rings, and an unrelated local process attaches to read its
+        responses. The same register-suppression as the worker attach path
+        applies (an unrelated process has its own resource tracker, which
+        must not unlink the daemon's ring when the client exits); the
+        owner's registration stays the abnormal-exit cleanup. Raises
+        FileNotFoundError when no such segment exists (daemon gone or the
+        ring already unlinked) — callers fall back to socket framing."""
+        return cls(name=name, create=False, min_slot=min_slot)
 
     @property
     def name(self) -> str:

@@ -93,7 +93,11 @@ class StripedFile:
 
     def __init__(self, pool: OstPool, name: str, cfg: StripeConfig,
                  rank: int = 0, mode: str = "w"):
-        assert cfg.stripe_count <= pool.n_osts, (cfg.stripe_count, pool.n_osts)
+        if cfg.stripe_count > pool.n_osts:
+            raise ValueError(
+                f"stripe_count={cfg.stripe_count} exceeds the pool's "
+                f"{pool.n_osts} OST(s) — a layout cannot stripe wider than "
+                f"the targets that exist")
         if mode not in ("w", "r"):
             raise ValueError(f"mode must be 'w' or 'r', got {mode!r}")
         self.pool = pool

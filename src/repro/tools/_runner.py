@@ -79,6 +79,13 @@ def io_report(prog: str):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.0f}", file=sys.stderr)
     for k in ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME"):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.6f}s", file=sys.stderr)
+    # plane-specific counters (transport, served reads) print only when the
+    # run exercised them — jbpls/jbpfsck output stays byte-stable
+    for k in ("TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES",
+              "SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS", "SERVICE_COALESCED",
+              "SERVICE_SHM_BYTES", "SERVICE_SOCKET_BYTES"):
+        if tot.get(k, 0.0):
+            print(f"{prog}: {k} = {tot[k]:.0f}", file=sys.stderr)
 
 
 def run_tool(main_fn, argv=None) -> int:

@@ -195,3 +195,43 @@ def test_property_aggregator_assignment(n_ranks, m):
     assign = [aggregator_of(r, n_ranks, m) for r in range(n_ranks)]
     assert assign == sorted(assign)
     assert set(assign) == set(range(min(m, n_ranks)))
+
+
+# ---------------------------------------------------- API-misuse hard errors
+# These held with `assert` before, i.e. not at all under `python -O`. A
+# writer driven out of protocol must fail loudly in every interpreter mode.
+
+def test_begin_step_while_step_open_raises(tmpdir_path):
+    w = BpWriter(tmpdir_path / "s.bp4", 1, EngineConfig())
+    w.begin_step(0)
+    with pytest.raises(RuntimeError, match="still open"):
+        w.begin_step(1)
+    w.end_step()
+    w.close()
+
+
+def test_put_outside_step_raises(tmpdir_path):
+    w = BpWriter(tmpdir_path / "s.bp4", 1, EngineConfig())
+    with pytest.raises(RuntimeError, match="outside begin"):
+        w.put("v", np.zeros(4, np.float32), global_shape=(4,),
+              offset=(0,), rank=0)
+    w.close()
+
+
+def test_end_step_outside_step_raises(tmpdir_path):
+    w = BpWriter(tmpdir_path / "s.bp4", 1, EngineConfig())
+    with pytest.raises(RuntimeError, match="outside begin_step"):
+        w.end_step()
+    w.close()
+
+
+def test_put_conflicting_global_shape_raises(tmpdir_path):
+    w = BpWriter(tmpdir_path / "s.bp4", 2, EngineConfig())
+    w.begin_step(0)
+    w.put("v", np.zeros((4, 4), np.float32), global_shape=(8, 4),
+          offset=(0, 0), rank=0)
+    with pytest.raises(ValueError, match="conflicts with"):
+        w.put("v", np.zeros((4, 4), np.float32), global_shape=(8, 5),
+              offset=(4, 0), rank=1)
+    w.end_step()
+    w.close()

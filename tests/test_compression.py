@@ -63,3 +63,82 @@ def test_property_shuffle_inverse(n, itemsize):
     rng = np.random.default_rng(n)
     buf = rng.integers(0, 256, n * itemsize, dtype=np.uint8).tobytes()
     assert C.byte_unshuffle(C.byte_shuffle(buf, itemsize), itemsize) == buf
+
+
+# ---------------------------------------------------------- corrupt payloads
+# These MUST hold under `python -O` too (asserts are stripped there) — the
+# decode path validates with real CorruptPayloadError raises, and the tier-1
+# CI job re-runs this file with PYTHONOPTIMIZE=1.
+
+def test_corrupt_bad_magic_raises():
+    buf = bytearray(C.compress(b"hello world" * 10, "zlib"))
+    buf[:4] = b"XXXX"
+    with pytest.raises(C.CorruptPayloadError, match="magic"):
+        C.decompress(bytes(buf))
+
+
+def test_corrupt_truncated_header_raises():
+    buf = C.compress(b"hello", "none")
+    with pytest.raises(C.CorruptPayloadError, match="truncated"):
+        C.decompress(buf[:C.HEADER.size - 2])
+
+
+def test_corrupt_truncated_payload_raises():
+    buf = C.compress(b"hello world" * 50, "zlib")
+    with pytest.raises(C.CorruptPayloadError, match="truncated"):
+        C.decompress(buf[:len(buf) - 3])
+
+
+def test_corrupt_stream_raises_not_codec_error():
+    """A flipped compressed byte must surface as CorruptPayloadError, not
+    leak zlib.error / OSError from the underlying codec."""
+    data = b"abcdefgh" * 200
+    for codec in ("zlib", "bzip2"):
+        buf = bytearray(C.compress(data, codec))
+        for i in range(C.HEADER.size, len(buf)):
+            buf[i] ^= 0xFF
+        with pytest.raises(C.CorruptPayloadError):
+            C.decompress(bytes(buf))
+
+
+def test_corrupt_unknown_codec_id_raises():
+    buf = bytearray(C.compress(b"hello", "none"))
+    buf[4] = 0x7F                              # codec id byte
+    with pytest.raises(C.CorruptPayloadError, match="codec"):
+        C.decompress(bytes(buf))
+
+
+def test_corrupt_payload_shape_mismatch_raises():
+    arr = np.arange(64, dtype=np.float32)
+    buf = C.array_payload(arr, "zlib")
+    with pytest.raises(C.CorruptPayloadError):
+        C.payload_to_array(buf, np.float32, (65,))
+
+
+def test_corruption_detected_under_python_O():
+    """Regression: the old `assert magic == MAGIC` vanished under -O and a
+    rotted payload decoded into garbage. Run the decode path in a real
+    `python -O` subprocess and require the exception to survive."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    code = (
+        "import sys\n"
+        # an `assert` would be stripped by the very flag under test
+        "if not sys.flags.optimize:\n"
+        "    raise SystemExit('optimize flag is off')\n"
+        "from repro.core import compression as C\n"
+        "buf = bytearray(C.compress(b'payload bytes' * 9, 'zlib'))\n"
+        "buf[:4] = b'ROTN'\n"
+        "try:\n"
+        "    C.decompress(bytes(buf))\n"
+        "except C.CorruptPayloadError:\n"
+        "    print('CAUGHT')\n"
+    )
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    env = dict(os.environ, PYTHONPATH=str(src), PYTHONOPTIMIZE="1")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "CAUGHT"

@@ -1,0 +1,364 @@
+"""jbpd service plane: ChunkCache (LRU/budget/coalescing) unit tests,
+daemon+client end-to-end parity (concurrent clients, overlapping boxes,
+bit-identical to direct reads), cache-hit parity after eviction, shm
+handoff fallback to socket framing, corrupt-payload error mapping, and
+restart/reconnect semantics."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.compression import CorruptPayloadError
+from repro.serve.jbpd import (ChunkCache, DaemonDisconnectedError, JbpDaemon,
+                              JbpdRequestError, SeriesClient, SeriesServer)
+
+
+def _write(path, *, n_ranks=4, aggregators=2, codec="zlib", steps=2, cols=4):
+    cfg = EngineConfig(aggregators=aggregators, codec=codec, workers=3)
+    w = BpWriter(path, n_ranks, cfg)
+    rng = np.random.default_rng(7)
+    truth = {}
+    rows = n_ranks * 16
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(rows, cols)).astype(np.float32)
+        truth[s] = g
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16],
+                  global_shape=g.shape, offset=(r * 16, 0), rank=r)
+        w.end_step()
+    w.close()
+    return truth
+
+
+@pytest.fixture()
+def series(tmpdir_path):
+    truth = _write(tmpdir_path / "s.bp4")
+    return tmpdir_path / "s.bp4", truth
+
+
+def _daemon(series_path, sock, **kw):
+    server_kw = {k: kw.pop(k) for k in ("cache_bytes", "parallel", "open_any")
+                 if k in kw}
+    server = SeriesServer([series_path], **server_kw)
+    return JbpDaemon(server, socket_path=sock, **kw).start()
+
+
+# ------------------------------------------------------------------ ChunkCache
+def test_cache_hit_miss_lru_eviction():
+    cache = ChunkCache(budget_bytes=3000)
+    fetches = []
+
+    def mk(key, n):
+        def fetch():
+            fetches.append(key)
+            return np.full(n // 4, key[1], np.float32)
+        return fetch
+
+    a = cache.get_or_fetch(("s", 1, "v", 0, 0), mk(("s", 1, "v", 0, 0), 1024),
+                           1024)
+    assert not a.flags.writeable            # shared objects are read-only
+    # hit: same key, no new fetch
+    cache.get_or_fetch(("s", 1, "v", 0, 0), mk(("s", 1, "v", 0, 0), 1024),
+                       1024)
+    assert cache.stats()["hits"] == 1 and len(fetches) == 1
+    # two more 1 KiB entries blow the 3000-byte budget -> LRU (first) evicted
+    cache.get_or_fetch(("s", 2, "v", 0, 0), mk(("s", 2, "v", 0, 0), 1024),
+                       1024)
+    cache.get_or_fetch(("s", 3, "v", 0, 0), mk(("s", 3, "v", 0, 0), 1024),
+                       1024)
+    assert cache.stats()["evictions"] == 1
+    cache.get_or_fetch(("s", 1, "v", 0, 0), mk(("s", 1, "v", 0, 0), 1024),
+                       1024)
+    assert fetches.count(("s", 1, "v", 0, 0)) == 2   # re-fetched after evict
+
+
+def test_cache_oversized_entry_served_not_cached():
+    cache = ChunkCache(budget_bytes=100)
+    arr = cache.get_or_fetch(("s", 0, "v", 0, 0),
+                             lambda: np.zeros(1024, np.uint8), 1024)
+    assert arr.nbytes == 1024
+    st = cache.stats()
+    assert st["entries"] == 0 and st["bytes"] == 0 and st["misses"] == 1
+
+
+def test_cache_coalesces_concurrent_identical_fetches():
+    cache = ChunkCache()
+    fetches = []
+    gate = threading.Event()
+
+    def slow_fetch():
+        fetches.append(1)
+        gate.wait(5.0)
+        return np.arange(8, dtype=np.float32)
+
+    results = []
+    ts = [threading.Thread(
+        target=lambda: results.append(
+            cache.get_or_fetch(("s", 0, "v", 0, 0), slow_fetch, 32)))
+        for _ in range(4)]
+    for t in ts:
+        t.start()
+    time.sleep(0.2)              # all four are in: one leader, 3 followers
+    gate.set()
+    for t in ts:
+        t.join(5.0)
+    assert len(fetches) == 1, "coalescing must leave exactly one fetcher"
+    assert cache.stats()["coalesced"] == 3
+    for r in results:
+        np.testing.assert_array_equal(r, results[0])
+
+
+def test_cache_failed_fetch_propagates_and_does_not_poison():
+    cache = ChunkCache()
+
+    def boom():
+        raise CorruptPayloadError("injected rot")
+
+    with pytest.raises(CorruptPayloadError):
+        cache.get_or_fetch(("s", 0, "v", 0, 0), boom, 32)
+    # the key is not stuck in-flight: a healthy retry succeeds
+    out = cache.get_or_fetch(("s", 0, "v", 0, 0),
+                             lambda: np.ones(4, np.float32), 16)
+    np.testing.assert_array_equal(out, np.ones(4, np.float32))
+
+
+# ------------------------------------------------------------------ end-to-end
+def test_metadata_queries_match_direct_reader(series, tmpdir_path):
+    path, truth = series
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with BpReader(path) as r, SeriesClient(d.address, path) as c:
+            assert c.steps() == r.valid_steps()
+            v = c.variables()
+            assert set(v) == {"var/x"}
+            assert tuple(v["var/x"]["shape"]) == truth[0].shape
+            assert c.layout() == r.layout()
+            assert c.var_minmax(0, "var/x") == r.var_minmax(0, "var/x")
+            chunks = c.iter_chunks(0, "var/x")
+            assert len(chunks) == 4
+            assert chunks == [ch.to_json() for ch in r.iter_chunks(0, "var/x")]
+
+
+def test_concurrent_clients_overlapping_boxes_bit_identical(series,
+                                                            tmpdir_path):
+    """N concurrent SeriesClients reading OVERLAPPING boxes must each get
+    bytes identical to a direct BpReader.read_var of the same box."""
+    path, truth = series
+    boxes = [((0, 0), (64, 4)), ((8, 1), (40, 2)),
+             ((0, 0), (32, 4)), ((16, 0), (48, 3))]
+    with BpReader(path) as r:
+        direct = [r.read_var(1, "var/x", o, e).tobytes() for o, e in boxes]
+    errs, done = [], []
+    with _daemon(path, tmpdir_path / "d.sock", parallel=2) as d:
+        def client(i):
+            try:
+                with SeriesClient(d.address, path) as c:
+                    for _ in range(3):
+                        o, e = boxes[i]
+                        got = c.read_var(1, "var/x", o, e)
+                        assert got.tobytes() == direct[i]
+                    done.append(i)
+            except Exception as exc:  # noqa: BLE001
+                errs.append(exc)
+
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(30.0)
+        assert not errs, errs
+        assert sorted(done) == [0, 1, 2, 3]
+        st = SeriesClient(d.address, path).stats()
+        assert st["counters"]["SERVICE_CACHE_HIT"] > 0
+
+
+def test_cache_hit_path_parity_after_eviction(series, tmpdir_path):
+    """A budget too small for one step's chunks forces evictions between
+    reads; re-reads (miss -> refetch) and any surviving hits must stay
+    bit-identical to the direct read."""
+    path, truth = series
+    # the series holds 8 chunks x 256 B; a 1 KiB budget fits only 4
+    with _daemon(path, tmpdir_path / "d.sock", cache_bytes=1024) as d:
+        with SeriesClient(d.address, path) as c:
+            for _ in range(3):
+                for s in truth:
+                    got = c.read_var(s, "var/x")
+                    np.testing.assert_array_equal(got, truth[s])
+            st = c.stats()["cache"]
+            assert st["evictions"] > 0, "budget never forced an eviction"
+    # ample budget: second read is all hits, still bit-identical
+    with _daemon(path, tmpdir_path / "d2.sock") as d:
+        with SeriesClient(d.address, path) as c:
+            a = c.read_var(0, "var/x")
+            b = c.read_var(0, "var/x")
+            assert a.tobytes() == b.tobytes() == truth[0].tobytes()
+            st = c.stats()["cache"]
+            assert st["hits"] >= 4 and st["evictions"] == 0
+
+
+def test_coalescing_counter_under_concurrent_identical_reads(series,
+                                                             tmpdir_path,
+                                                             monkeypatch):
+    """Concurrent clients issuing IDENTICAL cold reads must share one
+    fetch per chunk — the coalescing counter ends >= 1. A slowed fetch
+    makes the overlap deterministic."""
+    path, truth = series
+    real_fetch = BpReader._fetch_chunk
+
+    def slow_fetch(self, ch, dtype, local):
+        time.sleep(0.15)
+        return real_fetch(self, ch, dtype, local)
+
+    monkeypatch.setattr(BpReader, "_fetch_chunk", slow_fetch)
+    errs = []
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        def client():
+            try:
+                with SeriesClient(d.address, path) as c:
+                    got = c.read_var(0, "var/x")
+                    assert got.tobytes() == truth[0].tobytes()
+            except Exception as exc:  # noqa: BLE001
+                errs.append(exc)
+
+        ts = [threading.Thread(target=client) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(30.0)
+        assert not errs, errs
+        st = SeriesClient(d.address, path).stats()
+        assert st["counters"]["SERVICE_COALESCED"] >= 1
+        assert st["cache"]["coalesced"] >= 1
+
+
+def test_shm_handoff_falls_back_to_socket_framing(series, tmpdir_path):
+    """A response bigger than the connection's ring must arrive framed
+    down the socket instead — same bytes, degraded transport."""
+    path, truth = series
+    with _daemon(path, tmpdir_path / "d.sock", ring_bytes=4096) as d:
+        with SeriesClient(d.address, path) as c:
+            small = c.read_var(0, "var/x", (0, 0), (16, 4))   # 256 B: shm
+            np.testing.assert_array_equal(small, truth[0][:16])
+            st = c.stats()["counters"]
+            assert st["SERVICE_SHM_BYTES"] > 0
+            assert st["SERVICE_SOCKET_BYTES"] == 0
+    # a response bigger than the whole ring (16 KiB > 4 KiB capacity)
+    big = _write(tmpdir_path / "big.bp4", n_ranks=4, cols=64, steps=1)
+    with _daemon(tmpdir_path / "big.bp4", tmpdir_path / "d2.sock",
+                 ring_bytes=4096) as d:
+        with SeriesClient(d.address, tmpdir_path / "big.bp4") as c:
+            got = c.read_var(0, "var/x")
+            np.testing.assert_array_equal(got, big[0])
+            st = c.stats()["counters"]
+            assert st["SERVICE_SOCKET_BYTES"] >= got.nbytes
+
+
+def test_client_shm_disabled_and_tcp_daemon(series, tmpdir_path):
+    path, truth = series
+    # unix socket, client opts out of shm
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, path, shm=False) as c:
+            np.testing.assert_array_equal(c.read_var(0, "var/x"), truth[0])
+    # TCP daemon: shm never negotiated
+    server = SeriesServer([path])
+    with JbpDaemon(server, port=0) as d:
+        d.start()
+        with SeriesClient(d.address, path) as c:
+            np.testing.assert_array_equal(c.read_var(1, "var/x"), truth[1])
+            assert c.stats()["counters"]["SERVICE_SHM_BYTES"] == 0
+
+
+def test_corrupt_payload_maps_to_clean_error_response(tmpdir_path):
+    """A bit-rotted chunk must surface as a 'corrupt-payload' error
+    response — the connection and the daemon survive, and healthy
+    variables remain readable."""
+    w = BpWriter(tmpdir_path / "s.bp4", 2,
+                 EngineConfig(aggregators=2, codec="zlib"))
+    rng = np.random.default_rng(3)
+    w.begin_step(0)
+    ga = rng.normal(size=(32,)).astype(np.float32)
+    gb = rng.normal(size=(32,)).astype(np.float32)
+    for r in range(2):
+        w.put("a", ga[r * 16:(r + 1) * 16], global_shape=(32,),
+              offset=(r * 16,), rank=r)
+        w.put("b", gb[r * 16:(r + 1) * 16], global_shape=(32,),
+              offset=(r * 16,), rank=r)
+    w.end_step()
+    w.close()
+    with BpReader(tmpdir_path / "s.bp4") as r:
+        ch = next(c for c in r.iter_chunks(0, "b") if c.agg == 1)
+    data = tmpdir_path / "s.bp4" / "data.1"
+    raw = bytearray(data.read_bytes())
+    for i in range(ch.file_offset, ch.file_offset + ch.nbytes):
+        raw[i] ^= 0xFF
+    data.write_bytes(bytes(raw))
+    with _daemon(tmpdir_path / "s.bp4", tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, tmpdir_path / "s.bp4") as c:
+            with pytest.raises(JbpdRequestError) as ei:
+                c.read_var(0, "b")
+            assert ei.value.kind == "corrupt-payload"
+            np.testing.assert_array_equal(c.read_var(0, "a"), ga)
+
+
+def test_client_survives_daemon_restart_with_clear_error(series,
+                                                         tmpdir_path):
+    path, truth = series
+    sock = tmpdir_path / "d.sock"
+    d1 = _daemon(path, sock)
+    c = SeriesClient(d1.address, path)
+    np.testing.assert_array_equal(c.read_var(0, "var/x"), truth[0])
+    d1.stop()
+    with pytest.raises(DaemonDisconnectedError, match="reconnect"):
+        c.read_var(0, "var/x")
+    # no daemon at all: still the clear error, not a bare OSError
+    with pytest.raises(DaemonDisconnectedError, match="cannot reach"):
+        c.ping()
+    d2 = _daemon(path, sock)
+    try:
+        np.testing.assert_array_equal(c.read_var(1, "var/x"), truth[1])
+    finally:
+        c.close()
+        d2.stop()
+
+
+def test_unregistered_series_rejected_unless_open_any(series, tmpdir_path):
+    path, truth = series
+    other = _write(tmpdir_path / "o.bp4", steps=1)
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, tmpdir_path / "o.bp4") as c:
+            with pytest.raises(JbpdRequestError) as ei:
+                c.steps()
+            assert ei.value.kind == "not-served"
+    with _daemon(path, tmpdir_path / "d2.sock", open_any=True) as d:
+        with SeriesClient(d.address, tmpdir_path / "o.bp4") as c:
+            np.testing.assert_array_equal(c.read_var(0, "var/x"), other[0])
+
+
+def test_daemon_shutdown_op_stops_daemon(series, tmpdir_path):
+    path, _ = series
+    d = _daemon(path, tmpdir_path / "d.sock")
+    c = SeriesClient(d.address, path)
+    assert c.ping()
+    c.shutdown()
+    deadline = time.time() + 5.0
+    while not d._stopping.is_set() and time.time() < deadline:
+        time.sleep(0.02)
+    assert d._stopping.is_set()
+    # once the accept loop is gone, new connections must be refused
+    d._accept_thread.join(5.0)
+    assert not d._accept_thread.is_alive()
+    with pytest.raises(DaemonDisconnectedError):
+        SeriesClient(d.address, path).ping()
+
+
+def test_parallel_served_reads_use_reader_pool(series, tmpdir_path):
+    """parallel=N on the server fans chunk fetches over the shared
+    ReaderPool; results stay bit-identical."""
+    path, truth = series
+    with _daemon(path, tmpdir_path / "d.sock", parallel=4) as d:
+        with SeriesClient(d.address, path) as c:
+            for s in truth:
+                assert c.read_var(s, "var/x").tobytes() == \
+                    truth[s].tobytes()

@@ -309,3 +309,25 @@ def test_restore_checkpoint_parallel(tmpdir_path):
     assert step == 3
     for k in state:
         np.testing.assert_array_equal(restored[k], state[k])
+
+
+def test_idle_pool_never_wakes():
+    """Regression: idle workers used to spin on `cond.wait(timeout=0.1)`,
+    waking ~10N times/sec forever — a daemon hosting a pool burned CPU at
+    rest. Waits are now purely notification-driven: an idle pool must show
+    ZERO wakeups."""
+    pool = ReaderPool(4)
+    try:
+        time.sleep(0.6)                # ~24 spurious wakeups under the old spin
+        assert pool.wakeups == 0
+        done = []
+        pool.submit(0, lambda: done.append(1))
+        pool.drain()
+        assert done == [1]
+        time.sleep(0.3)                # let every notified worker re-park
+        woke = pool.wakeups
+        assert woke >= 1               # real work does wake workers
+        time.sleep(0.4)                # ...and idling again stays silent
+        assert pool.wakeups == woke
+    finally:
+        pool.shutdown()

@@ -118,3 +118,11 @@ def test_property_append_roundtrip(stripe_count, stripe_size, chunks):
         f.close()
     finally:
         shutil.rmtree(d, ignore_errors=True)
+
+
+def test_stripe_count_wider_than_pool_raises(tmpdir_path):
+    """Promoted from a stripped-under-`-O` assert: a layout cannot stripe
+    wider than the OSTs that exist."""
+    pool = OstPool(tmpdir_path, 2)
+    with pytest.raises(ValueError, match="exceeds"):
+        StripedFile(pool, "f", StripeConfig(stripe_count=3, stripe_size=256))
