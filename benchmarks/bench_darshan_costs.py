@@ -1,10 +1,20 @@
 """Paper Fig 5: Darshan avg I/O cost per process (reads / metadata / writes)
-for Original I/O vs openPMD+BP4 — the metadata-collapse result."""
+for Original I/O vs openPMD+BP4 — the metadata-collapse result.
+
+Also the home of the DXT tracing-overhead sweep (`run_tracing_overhead`):
+the instrumentation's cost contract is "off = one branch per op, on =
+bounded ring-buffer appends", and the sweep measures both against the same
+BpWriter write path with interleaved min-of-N trials and ASSERTS the
+tracing overhead stays ≤5% — CI runs this, so a regression that makes the
+hot-path hooks expensive fails the build, not just a dashboard."""
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import Timer, emit, pic_payload, tmp_io_dir
 from repro.core.bp_engine import BpWriter, EngineConfig
 from repro.core.darshan import MONITOR
+from repro.core.dxt import TRACER
 from repro.core.original_io import write_dat, write_dmp
 
 
@@ -44,5 +54,71 @@ def run(n_ranks=64, bytes_per_rank=128 * 1024, dumps=3):
              f"{(1 - bp['meta_s'] / max(orig['meta_s'], 1e-12)) * 100:.2f}%")
 
 
+def _traced_write_pass(d, n_ranks, bytes_per_rank, steps):
+    """One full BpWriter write pass; returns wall seconds."""
+    with Timer() as t:
+        w = BpWriter(d / "s.bp4", n_ranks,
+                     EngineConfig(aggregators=2, codec="none"))
+        for s in range(steps):
+            w.begin_step(s)
+            for r in range(n_ranks):
+                arr = pic_payload(r, bytes_per_rank)["particles"]
+                w.put("p/x", arr, global_shape=(arr.size * n_ranks,),
+                      offset=(arr.size * r,), rank=r)
+            w.end_step()
+        w.close()
+    return t.dt
+
+
+def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
+                         trials=5, max_overhead_pct=5.0):
+    """DXT tracing-overhead sweep: the same write path with tracing off vs
+    on, interleaved (off, on, off, on, ...) so drift in the machine hits
+    both arms, min-of-N per arm. Asserts on-vs-off overhead ≤5%."""
+    was_enabled = TRACER.enabled
+    t_off, t_on = float("inf"), float("inf")
+    try:
+        for _ in range(trials):
+            for mode_on in (False, True):
+                MONITOR.reset()
+                TRACER.disable()
+                TRACER.reset()
+                if mode_on:
+                    TRACER.enable()
+                with tmp_io_dir("/dev/shm") as d:
+                    dt = _traced_write_pass(d, n_ranks, bytes_per_rank, steps)
+                if mode_on:
+                    t_on = min(t_on, dt)
+                else:
+                    t_off = min(t_off, dt)
+        n_events = TRACER.stats()["events"]
+    finally:
+        TRACER.disable()
+        TRACER.reset()
+        if was_enabled:
+            TRACER.enable()
+    overhead_pct = (t_on / t_off - 1.0) * 100.0
+    emit("darshan/dxt_off s", t_off * 1e6, f"{t_off:.6f}s min of {trials}")
+    emit("darshan/dxt_on s", t_on * 1e6,
+         f"{t_on:.6f}s min of {trials}, {n_events} events/run")
+    emit("darshan/dxt_overhead_pct", overhead_pct,
+         f"{overhead_pct:+.2f}% (budget {max_overhead_pct:.0f}%)")
+    assert overhead_pct <= max_overhead_pct, (
+        f"DXT tracing overhead {overhead_pct:+.2f}% exceeds the "
+        f"{max_overhead_pct:.0f}% budget (off={t_off:.6f}s on={t_on:.6f}s)")
+    return overhead_pct
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(
+        description="Darshan cost comparison + DXT tracing-overhead sweep")
+    ap.add_argument("--overhead-only", action="store_true",
+                    help="run only the tracing-overhead sweep (CI smoke)")
+    ap.add_argument("--ranks", type=int, default=16)
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--max-overhead-pct", type=float, default=5.0)
+    args = ap.parse_args()
+    if not args.overhead_only:
+        run()
+    run_tracing_overhead(n_ranks=args.ranks, trials=args.trials,
+                         max_overhead_pct=args.max_overhead_pct)

@@ -39,6 +39,8 @@ def main(argv=None) -> None:
         ("ior", lambda: bench_ior.run(n_ranks=8 if quick else 32)),
         ("darshan_costs", lambda: bench_darshan_costs.run(
             n_ranks=16 if quick else 256, dumps=3 if quick else 5)),
+        ("darshan_dxt_overhead", lambda: bench_darshan_costs.run_tracing_overhead(
+            n_ranks=8 if quick else 16, trials=3 if quick else 5)),
         ("aggregators", lambda: bench_aggregators.run(
             n_ranks=32 if quick else 128,
             agg_counts=(1, 4, 16, 32) if quick else (1, 2, 4, 8, 16, 32, 64, 128))),

@@ -52,6 +52,7 @@ import time
 from typing import Callable, Optional
 
 from repro.core.bp_engine import BpWriter, EngineConfig, StepSnapshot
+from repro.core.dxt import TRACER
 
 
 class _PipelinedCommitter:
@@ -165,7 +166,8 @@ class _PipelinedCommitter:
                 if self._error is None and not self._halt:
                     snap.extra["queue_delay_s"] = (time.perf_counter() -
                                                    snap.extra.pop("t_submit"))
-                    holder["prof"] = self._commit_fn(snap)
+                    with TRACER.span("pipeline", path=f"step.{snap.step}"):
+                        holder["prof"] = self._commit_fn(snap)
             except BaseException as e:     # noqa: BLE001 — surfaced to producer
                 self._error = e            # first failure is the root cause
             finally:

@@ -51,6 +51,7 @@ from repro.core import compression as C
 from repro.core.aggregation import (AggregatorConfig, SubfileSet, WriterPool,
                                     aggregator_of)
 from repro.core.darshan import open_file
+from repro.core.dxt import TRACER
 from repro.core.reader_pool import ReaderPool
 from repro.core.striping import OstPool, StripeConfig, StripedFile
 
@@ -154,18 +155,20 @@ def seal_md_record(md, idx, md_off: int, step: int, blob: bytes,
     returning (md.0 fsynced BEFORE the idx record exists, so a validated
     idx record always points at durable metadata); otherwise bytes reach
     the OS and the fsync is deferred to close. Returns the new md offset."""
-    md.write(blob)
-    crc = zlib.crc32(blob) & 0xFFFFFFFF
-    rec = IDX_RECORD.pack(step, md_off, len(blob), crc, 1,
-                          time.time_ns(), 0, 0)
-    if fsync_step:
-        md.fsync()
-        idx.write(rec)
-        idx.fsync()
-    else:
-        idx.write(rec)
-        md.flush()       # bytes reach the OS; fsync deferred to close
-        idx.flush()
+    with TRACER.span("seal", path=getattr(idx, "path", ""),
+                     length=len(blob)):
+        md.write(blob)
+        crc = zlib.crc32(blob) & 0xFFFFFFFF
+        rec = IDX_RECORD.pack(step, md_off, len(blob), crc, 1,
+                              time.time_ns(), 0, 0)
+        if fsync_step:
+            md.fsync()
+            idx.write(rec)
+            idx.fsync()
+        else:
+            idx.write(rec)
+            md.flush()   # bytes reach the OS; fsync deferred to close
+            idx.flush()
     return md_off + len(blob)
 
 
@@ -189,11 +192,14 @@ def take_step_snapshot(step: Optional[int], pending: dict, attrs: dict, *,
     `copy=True` deep-copy semantics cannot drift between engines)."""
     if step is None:
         raise RuntimeError("end_step() outside begin_step()")
-    if copy:
-        pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
-                          "chunks": [(r, off, np.array(arr))
-                                     for r, off, arr in var["chunks"]]}
-                   for name, var in pending.items()}
+    with TRACER.span("snapshot", path=f"step.{step}") as sp:
+        if copy:
+            pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
+                              "chunks": [(r, off, np.array(arr))
+                                         for r, off, arr in var["chunks"]]}
+                       for name, var in pending.items()}
+        sp.length = sum(arr.nbytes for var in pending.values()
+                        for _, _, arr in var["chunks"])
     return StepSnapshot(step, pending, dict(attrs))
 
 
@@ -296,12 +302,16 @@ class BpWriter:
             try:
                 tc = time.perf_counter()
                 payloads, metas = [], []
-                for name, rank, offset, arr in items:
-                    payload = C.array_payload(arr, self.cfg.codec,
-                                              block=self.cfg.compression_block)
-                    payloads.append(payload)
-                    metas.append((name, rank, offset, arr.shape, len(payload),
-                                  chunk_stats(arr)))
+                with TRACER.span("compress", path=f"data.{agg}",
+                                 rank=agg) as sp:
+                    for name, rank, offset, arr in items:
+                        payload = C.array_payload(
+                            arr, self.cfg.codec,
+                            block=self.cfg.compression_block)
+                        payloads.append(payload)
+                        metas.append((name, rank, offset, arr.shape,
+                                      len(payload), chunk_stats(arr)))
+                    sp.length = sum(len(p) for p in payloads)
                 tcomp = time.perf_counter() - tc
                 base = self.subfiles.append(agg, b"".join(payloads))
             except Exception as e:   # noqa: BLE001
@@ -356,6 +366,8 @@ class BpWriter:
         if self.cfg.profiling:
             with open_file(self.path / "profiling.json", "w", rank=0) as f:
                 f.write(json.dumps(self._profile_doc(), indent=1))
+        if TRACER.enabled:
+            TRACER.dump(self.path / "dxt.json")
 
 
 def _box_intersection(coff, cext, sel_off, sel_ext):

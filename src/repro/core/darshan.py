@@ -17,9 +17,12 @@ import time
 from collections import defaultdict
 from typing import Optional
 
+from repro.core.dxt import TRACER
+
 _COUNTER_KEYS = (
     "POSIX_OPENS", "POSIX_READS", "POSIX_WRITES", "POSIX_SEEKS",
-    "POSIX_FSYNCS", "POSIX_STATS", "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN",
+    "POSIX_FLUSHES", "POSIX_FSYNCS", "POSIX_CLOSES", "POSIX_STATS",
+    "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN",
 )
 _TIME_KEYS = ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME")
 # chunk-transport accounting for the parallel write plane: bytes that moved
@@ -58,6 +61,11 @@ class DarshanMonitor:
     def reset(self):
         with getattr(self, "_lock", threading.Lock()):
             self._t0 = time.perf_counter()
+            # wall-clock instant of _t0: shipped in snapshot() so merge()
+            # can rebase another process's heatmap bins onto THIS monitor's
+            # time base (each process's bins are relative to its private
+            # _t0 — superimposing them raw misaligns the timelines)
+            self._t0_epoch = time.time()
             self._per_rank = defaultdict(lambda: defaultdict(float))
             self._per_file = defaultdict(lambda: defaultdict(float))
             self._size_hist = defaultdict(float)
@@ -96,11 +104,17 @@ class DarshanMonitor:
                 "per_file": {p: dict(c) for p, c in self._per_file.items()},
                 "size_hist": dict(self._size_hist),
                 "heatmap": [[r, b, v] for (r, b), v in self._heatmap.items()],
+                "epoch": self._t0_epoch,
+                "bin_s": self.heatmap_bin_s,
             }
 
     def merge(self, snap: dict):
         """Fold a `snapshot()` from another process into this monitor
-        (additive on every counter)."""
+        (additive on every counter). Heatmap bins are REBASED via the
+        snapshot's clock epoch: bin b of the source covers wall time
+        `src_epoch + b*bin_s`, which lands at a different bin index on
+        this monitor's axis — two monitors started at different times
+        must not superimpose their timelines at bin 0."""
         if not snap:
             return
         with self._lock:
@@ -114,8 +128,13 @@ class DarshanMonitor:
                     dst[k] += v
             for k, v in snap.get("size_hist", {}).items():
                 self._size_hist[k] += v
+            src_epoch = snap.get("epoch")
+            src_bin = snap.get("bin_s", self.heatmap_bin_s)
             for r, b, v in snap.get("heatmap", []):
-                self._heatmap[(r, b)] += v
+                if src_epoch is not None:
+                    t = src_epoch + b * src_bin       # wall time of the bin
+                    b = int((t - self._t0_epoch) / self.heatmap_bin_s)
+                self._heatmap[(r, max(b, 0))] += v
 
     # ------------------------------------------------------------------ report
     def report(self, n_procs: Optional[int] = None) -> dict:
@@ -174,6 +193,20 @@ class DarshanMonitor:
         lines.append("# access size histogram")
         for k, v in sorted(rep["access_size_histogram"].items()):
             lines.append(f"hist\t{k}\t{v:.0f}")
+        # DXT trace summary — per-operation tracing state (repro.core.dxt);
+        # always emitted so consumers can parse the block unconditionally
+        ts = TRACER.stats()
+        lines.append("#")
+        lines.append("# DXT trace summary (per-operation tracing)")
+        lines.append(f"dxt_enabled\t{1 if ts['enabled'] else 0}")
+        lines.append(f"dxt_events\t{ts['events']}")
+        lines.append(f"dxt_dropped\t{ts['dropped']}")
+        if ts["events"]:
+            by_op: dict[str, int] = {}
+            for _s, _r, _p, op, _o, _l, _t0, _t1 in TRACER.events():
+                by_op[op] = by_op.get(op, 0) + 1
+            for op in sorted(by_op):
+                lines.append(f"dxt_op\t{op}\t{by_op[op]}")
         return "\n".join(lines)
 
 
@@ -181,7 +214,10 @@ MONITOR = DarshanMonitor()
 
 
 class InstrumentedFile:
-    """File handle that reports every op to the monitor."""
+    """File handle that reports every op to the monitor — and, when DXT
+    tracing is on, records one `(rank, path, op, offset, length, t0, t1)`
+    event per op (offsets from the handle's own position tracking; the
+    trace costs one branch per op while disabled)."""
 
     def __init__(self, path: str, mode: str, rank: int = 0,
                  monitor: DarshanMonitor = MONITOR):
@@ -190,51 +226,82 @@ class InstrumentedFile:
         self.mon = monitor
         t0 = time.perf_counter()
         self._f = open(self.path, mode)
+        t1 = time.perf_counter()
+        self._pos = self._f.tell()          # append modes start at EOF
         self.mon.record(rank, self.path, "POSIX_OPENS", 1.0, "F_META_TIME",
-                        time.perf_counter() - t0)
+                        t1 - t0)
+        if TRACER.enabled:
+            TRACER.record(rank, self.path, "open", self._pos, 0, t0, t1)
 
     def write(self, data) -> int:
         t0 = time.perf_counter()
         n = self._f.write(data)
+        t1 = time.perf_counter()
         nb = n if isinstance(n, int) else len(data)
+        off = self._pos
+        self._pos = off + nb
         self.mon.record(self.rank, self.path, "POSIX_WRITES", 1.0,
-                        "F_WRITE_TIME", time.perf_counter() - t0, nbytes=nb)
+                        "F_WRITE_TIME", t1 - t0, nbytes=nb)
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "write", off, nb, t0, t1)
         return nb
 
     def read(self, n: int = -1):
         t0 = time.perf_counter()
         data = self._f.read(n)
+        t1 = time.perf_counter()
+        off = self._pos
+        self._pos = off + len(data)
         self.mon.record(self.rank, self.path, "POSIX_READS", 1.0,
-                        "F_READ_TIME", time.perf_counter() - t0,
-                        nbytes=len(data))
+                        "F_READ_TIME", t1 - t0, nbytes=len(data))
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "read", off, len(data),
+                          t0, t1)
         return data
 
     def seek(self, off: int, whence: int = 0):
         t0 = time.perf_counter()
         r = self._f.seek(off, whence)
+        t1 = time.perf_counter()
+        self._pos = self._f.tell() if whence else off
         self.mon.record(self.rank, self.path, "POSIX_SEEKS", 1.0,
-                        "F_META_TIME", time.perf_counter() - t0)
+                        "F_META_TIME", t1 - t0)
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "seek", self._pos, 0, t0, t1)
         return r
 
     def tell(self) -> int:
         return self._f.tell()
 
     def flush(self):
-        """Userspace-buffer flush (write(2) without the fsync barrier)."""
+        """Userspace-buffer flush (write(2) without the fsync barrier) —
+        metadata time that used to be invisible to the monitor."""
+        t0 = time.perf_counter()
         self._f.flush()
+        t1 = time.perf_counter()
+        self.mon.record(self.rank, self.path, "POSIX_FLUSHES", 1.0,
+                        "F_META_TIME", t1 - t0)
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "flush", self._pos, 0, t0, t1)
 
     def fsync(self):
         t0 = time.perf_counter()
         self._f.flush()
         os.fsync(self._f.fileno())
+        t1 = time.perf_counter()
         self.mon.record(self.rank, self.path, "POSIX_FSYNCS", 1.0,
-                        "F_META_TIME", time.perf_counter() - t0)
+                        "F_META_TIME", t1 - t0)
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "fsync", self._pos, 0, t0, t1)
 
     def close(self):
         t0 = time.perf_counter()
         self._f.close()
-        self.mon.record(self.rank, self.path, "POSIX_STATS", 0.0,
-                        "F_META_TIME", time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.mon.record(self.rank, self.path, "POSIX_CLOSES", 1.0,
+                        "F_META_TIME", t1 - t0)
+        if TRACER.enabled:
+            TRACER.record(self.rank, self.path, "close", self._pos, 0, t0, t1)
 
     def __enter__(self):
         return self
@@ -246,3 +313,22 @@ class InstrumentedFile:
 def open_file(path, mode, rank: int = 0,
               monitor: DarshanMonitor = MONITOR) -> InstrumentedFile:
     return InstrumentedFile(path, mode, rank=rank, monitor=monitor)
+
+
+def merge_worker_payload(payload, monitor: DarshanMonitor = MONITOR,
+                         tracer=TRACER):
+    """Merge one worker's "finished"/"closed"/ack payload into this
+    process's monitor (and tracer). Tracing workers ship
+    `{"darshan": <monitor snapshot>, "dxt": <tracer snapshot>}`; workers
+    with tracing off (and pre-DXT peers) ship the bare monitor snapshot."""
+    if not isinstance(payload, dict):
+        return
+    if "darshan" in payload or "dxt" in payload:
+        snap = payload.get("darshan")
+        if snap:
+            monitor.merge(snap)
+        trace = payload.get("dxt")
+        if trace:
+            tracer.ingest(trace)
+    else:
+        monitor.merge(payload)

@@ -81,6 +81,13 @@ stay mapped across saves and are unlinked in `shutdown()` — plus a
 `TRANSPORT_SHM_BYTES` / `TRANSPORT_PICKLE_FALLBACK_BYTES` counters) and
 the coordinator merges it — `parser_dump` in the parent covers the whole
 write plane.
+
+DXT tracing (`repro.core.dxt`): when the coordinator's TRACER is enabled
+the flag rides the spawn args / "open" payload, workers trace their own
+compress/seal spans + per-op file events, and ship trace buffers home on
+the "prepared" ack (per step) and "finished"/"closed" (remainder) next
+to the counter snapshot — each snapshot carries the worker's clock epoch
+so `TRACER.ingest` rebases everything onto the coordinator's wall clock.
 """
 from __future__ import annotations
 
@@ -105,7 +112,8 @@ from repro.core.bp_engine import (ChunkMeta, EngineConfig, StepSnapshot,
                                   build_md_record, chunk_stats,
                                   seal_md_record, take_step_snapshot,
                                   validate_put_rank)
-from repro.core.darshan import open_file
+from repro.core.darshan import merge_worker_payload, open_file
+from repro.core.dxt import TRACER
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
                                       unlink_rings, validate_transport)
 from repro.core.striping import OstPool
@@ -149,7 +157,7 @@ def _open_worker_files(path: pathlib.Path, w: int, n_writers: int,
 
 
 def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
-                 ring_name: Optional[str] = None):
+                 ring_name: Optional[str] = None, trace: bool = False):
     """One writer process: owns data.<w> + md.<w>.shard while a series is
     open. With `path_str=None` the worker starts IDLE (a `WriterPlane`
     member) and is retargeted per series via "open"/"finish" — the process
@@ -168,9 +176,14 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
            ("close", None, None)   close files (if open) and exit
       out: ("ready", w, None, None)           files open / idle, accepting
            ("prepared", w, step, info)        payload + shard sealed on disk
+                                              (info["dxt"]: trace snapshot
+                                              when tracing)
            ("error", w, step, traceback_str)  step failed; worker stays alive
-           ("finished", w, None, darshan)     files closed; darshan snapshot
-           ("closed", w, None, darshan)       exiting; darshan snapshot
+           ("finished", w, None, payload)     files closed; monitor snapshot,
+                                              or {"darshan","dxt"} when
+                                              tracing (merge_worker_payload
+                                              takes either)
+           ("closed", w, None, payload)       exiting; same payload shape
 
     The "prepared"/"error" ack is also the transport FREE-LIST: the
     coordinator releases the step's ring slots when it arrives (the worker
@@ -189,6 +202,22 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
     # death lets the tracker reap /dev/shm. (No-op when _worker_main runs
     # as a thread in tests: parent_process() is None in the main process.)
     parent = multiprocessing.parent_process()
+    # DXT: a spawned worker inherits tracing from the coordinator's flag
+    # (env-based enablement also works — spawn re-imports dxt.py). Trace
+    # buffers are shipped home ONLY from a real child process: in thread
+    # mode the parent's TRACER *is* this tracer, and a reset-snapshot
+    # would steal the coordinator's own events.
+    if trace and parent is not None:
+        TRACER.enable()
+
+    def _ship_payload(reset: bool):
+        snap = MONITOR.snapshot()
+        if reset:
+            MONITOR.reset()
+        if parent is not None and TRACER.enabled:
+            return {"darshan": snap, "dxt": TRACER.snapshot(reset=True)}
+        return snap
+
     if parent is not None:
         def _exit_with_parent():
             parent.join()               # returns only when the parent died
@@ -228,7 +257,9 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
         if tag == "open":
             try:
                 _teardown()                     # stale series, if any
-                o_path, o_n, o_cfg = msg[2]
+                o_path, o_n, o_cfg = msg[2][:3]
+                if len(msg[2]) > 3 and msg[2][3] and parent is not None:
+                    TRACER.enable()             # coordinator traces this series
                 n_writers, cfg = o_n, o_cfg
                 spath = str(o_path)
                 subfiles, shard = _open_worker_files(
@@ -244,16 +275,14 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             except BaseException:               # noqa: BLE001
                 result_q.put(("error", w, None, traceback.format_exc()))
                 continue
-            snap = MONITOR.snapshot()
-            MONITOR.reset()
-            result_q.put(("finished", w, None, snap))
+            result_q.put(("finished", w, None, _ship_payload(reset=True)))
             continue
         if tag == "close":
             try:
                 _teardown()
             except BaseException:               # noqa: BLE001
                 pass                            # exiting anyway
-            result_q.put(("closed", w, None, MONITOR.snapshot()))
+            result_q.put(("closed", w, None, _ship_payload(reset=False)))
             if ring is not None:
                 ring.close()
             return
@@ -267,21 +296,23 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             tcomp = 0.0
             shm_bytes = fallback_bytes = 0
             payloads, metas = [], []
-            for name, rank, offset, chunk in items:
-                if isinstance(chunk, ShmHeader):
-                    arr = ring.view(chunk)      # zero-copy: shared pages
-                    shm_bytes += chunk.nbytes
-                else:
-                    arr = chunk                 # pickle path / spill
-                    fallback_bytes += arr.nbytes
-                tc = time.perf_counter()
-                payload = C.array_payload(arr, cfg.codec,
-                                          block=cfg.compression_block)
-                tcomp += time.perf_counter() - tc
-                payloads.append(payload)
-                metas.append((name, rank, offset, arr.shape, len(payload),
-                              chunk_stats(arr)))
-                del arr                         # release any shm view NOW
+            with TRACER.span("compress", path=f"data.{w}", rank=w) as csp:
+                for name, rank, offset, chunk in items:
+                    if isinstance(chunk, ShmHeader):
+                        arr = ring.view(chunk)  # zero-copy: shared pages
+                        shm_bytes += chunk.nbytes
+                    else:
+                        arr = chunk             # pickle path / spill
+                        fallback_bytes += arr.nbytes
+                    tc = time.perf_counter()
+                    payload = C.array_payload(arr, cfg.codec,
+                                              block=cfg.compression_block)
+                    tcomp += time.perf_counter() - tc
+                    payloads.append(payload)
+                    metas.append((name, rank, offset, arr.shape, len(payload),
+                                  chunk_stats(arr)))
+                    del arr                     # release any shm view NOW
+                csp.length = sum(len(p) for p in payloads)
             if ring is not None:
                 tkey = f"{spath}/transport"
                 if shm_bytes:
@@ -305,19 +336,25 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             # the shard, and a stale counter would desync every later
             # commit ("worker stays alive" requires this)
             rec_off = shard.tell()
-            shard.write(SHARD_HDR.pack(step, len(blob), crc))
-            shard.write(blob)
-            if cfg.fsync_policy == "step":
-                subfiles.fsync_one(w)
-                shard.fsync()
-            else:
-                subfiles.flush_one(w)
-                shard.flush()      # coordinator reads the record back NOW
+            with TRACER.span("seal", path=f"md.{w}.shard", rank=w,
+                             length=len(blob)):
+                shard.write(SHARD_HDR.pack(step, len(blob), crc))
+                shard.write(blob)
+                if cfg.fsync_policy == "step":
+                    subfiles.fsync_one(w)
+                    shard.fsync()
+                else:
+                    subfiles.flush_one(w)
+                    shard.flush()  # coordinator reads the record back NOW
             info = {"shard_off": rec_off,
                     "shard_len": SHARD_HDR.size + len(blob), "crc": crc,
                     "compress_s": tcomp, "bytes_stored": off - base,
                     "shm_bytes": shm_bytes, "fallback_bytes": fallback_bytes,
                     "worker_s": time.perf_counter() - t0}
+            if parent is not None and TRACER.enabled:
+                # ship this step's trace events home on the ack itself —
+                # the coordinator's timeline stays live, not close-time
+                info["dxt"] = TRACER.snapshot(reset=True)
             result_q.put(("prepared", w, step, info))
         except BaseException:                   # noqa: BLE001
             result_q.put(("error", w, step, traceback.format_exc()))
@@ -409,7 +446,8 @@ class WriterPlane:
         ring_names = [r.name for r in self.rings] or [None] * self.m
         self.workers, self.result_q = spawn_io_workers(
             self.m, _worker_main,
-            lambda i, tq, rq: (i, None, self.m, None, tq, rq, ring_names[i]))
+            lambda i, tq, rq: (i, None, self.m, None, tq, rq, ring_names[i],
+                               TRACER.enabled))
         try:       # idle-ready handshake: every process is up and listening
             collect_acks(self.workers, self.result_q, "ready", range(self.m),
                          timeout=self.ack_timeout)
@@ -429,7 +467,6 @@ class WriterPlane:
         if self._shut:
             return
         self._shut = True
-        from repro.core.darshan import MONITOR
         for p, tq in self.workers:
             if p.is_alive():
                 tq.put(("close", None, None))
@@ -439,8 +476,8 @@ class WriterPlane:
                     self.workers, self.result_q, "closed",
                     [i for i, (p, _) in enumerate(self.workers)
                      if p.is_alive()], timeout=self.ack_timeout)
-                for snap in got.values():
-                    MONITOR.merge(snap)
+                for payload in got.values():
+                    merge_worker_payload(payload)
             except BaseException:               # noqa: BLE001
                 pass                            # best effort on teardown
         for p, tq in self.workers:
@@ -518,7 +555,8 @@ class ParallelBpWriter:
                 self._rings = plane.rings[:self.m]
                 for wid in range(self.m):
                     self._workers[wid][1].put(
-                        ("open", None, (str(self.path), self.m, cfg)))
+                        ("open", None, (str(self.path), self.m, cfg,
+                                        TRACER.enabled)))
             else:
                 if transport == "shm":
                     self._rings = _make_rings(self.m, ring_bytes)
@@ -528,7 +566,7 @@ class ParallelBpWriter:
                 self._workers, self._result_q = spawn_io_workers(
                     self.m, _worker_main,
                     lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq,
-                                       ring_names[i]))
+                                       ring_names[i], TRACER.enabled))
             self._collect("ready", range(self.m))   # spawn/open failures here
         except BaseException:
             # a failed bring-up must not leak the md handles, the rings, OR
@@ -648,21 +686,25 @@ class ParallelBpWriter:
         shm_slots: dict[int, list[int]] = {}
         shm_bytes = fallback_bytes = 0
         try:
-            for wid, items in by_w.items():
-                ring = self._rings[wid] if self._rings else None
-                wire_items = []
-                for name, rank, offset, arr in items:
-                    hdr = ring.write_array(arr) if ring is not None else None
-                    if hdr is not None:
-                        shm_slots.setdefault(wid, []).append(hdr.offset)
-                        shm_bytes += arr.nbytes
-                        wire_items.append((name, rank, offset, hdr))
-                    else:
-                        if ring is not None:
-                            fallback_bytes += arr.nbytes
-                        wire_items.append((name, rank, offset, arr))
-                self._workers[wid][1].put(("step", step, wire_items))
-            acks = self._collect("prepared", by_w, step=step)
+            with TRACER.span("transport", path=str(self.path),
+                             length=n_bytes_raw):
+                for wid, items in by_w.items():
+                    ring = self._rings[wid] if self._rings else None
+                    wire_items = []
+                    for name, rank, offset, arr in items:
+                        hdr = (ring.write_array(arr)
+                               if ring is not None else None)
+                        if hdr is not None:
+                            shm_slots.setdefault(wid, []).append(hdr.offset)
+                            shm_bytes += arr.nbytes
+                            wire_items.append((name, rank, offset, hdr))
+                        else:
+                            if ring is not None:
+                                fallback_bytes += arr.nbytes
+                            wire_items.append((name, rank, offset, arr))
+                    self._workers[wid][1].put(("step", step, wire_items))
+            with TRACER.span("prepare", path=str(self.path)):
+                acks = self._collect("prepared", by_w, step=step)
         finally:
             # the ack (prepared OR error OR abort) is the free-list: the
             # step is resolved, the worker is done (or dead) — reclaim its
@@ -673,6 +715,10 @@ class ParallelBpWriter:
             for wid, offs in shm_slots.items():
                 for off in offs:
                     self._rings[wid].free(off)
+        for a in acks.values():                 # workers ship per-step traces
+            trace = a.pop("dxt", None)
+            if trace:
+                TRACER.ingest(trace)
         merged: dict[str, list] = {name: [] for name in snap.pending}
         for wid in sorted(acks):
             rec = self._read_shard_record(wid, acks[wid], step)
@@ -687,11 +733,13 @@ class ParallelBpWriter:
         # ---- phase 2: COMMIT — merge shard chunk tables into md.0/md.idx
         # (record layout and seal ordering live in bp_engine so every
         # engine commits identically — byte parity is not re-implemented)
-        md_rec = build_md_record(step, snap.attrs, snap.pending, merged)
-        blob = json.dumps(md_rec).encode()
-        self._md_off = seal_md_record(
-            self._md, self._idx, self._md_off, step, blob,
-            fsync_step=self.cfg.fsync_policy == "step")
+        with TRACER.span("commit", path=str(self.path)) as sp:
+            md_rec = build_md_record(step, snap.attrs, snap.pending, merged)
+            blob = json.dumps(md_rec).encode()
+            sp.length = len(blob)
+            self._md_off = seal_md_record(
+                self._md, self._idx, self._md_off, step, blob,
+                fsync_step=self.cfg.fsync_policy == "step")
 
         dt = time.perf_counter() - t0
         prof = {"step": step, "write_s": dt, "prepare_s": t_prepare,
@@ -746,7 +794,6 @@ class ParallelBpWriter:
         if self._closed:
             return
         self._closed = True
-        from repro.core.darshan import MONITOR
         errors: list[BaseException] = []
         if self._committer is not None:
             try:
@@ -762,8 +809,8 @@ class ParallelBpWriter:
                 got = self._collect(
                     "finished", [i for i in range(self.m)
                                  if self._workers[i][0].is_alive()])
-                for snap in got.values():
-                    MONITOR.merge(snap)
+                for payload in got.values():
+                    merge_worker_payload(payload)
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
         else:
@@ -773,8 +820,8 @@ class ParallelBpWriter:
                 got = self._collect(
                     "closed", [i for i, (p, _) in enumerate(self._workers)
                                if p.is_alive()])
-                for snap in got.values():
-                    MONITOR.merge(snap)
+                for payload in got.values():
+                    merge_worker_payload(payload)
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
             # a worker that died mid-step (or is wedged) must not turn
@@ -798,6 +845,10 @@ class ParallelBpWriter:
         if self.cfg.profiling:
             with open_file(self.path / "profiling.json", "w", rank=0) as f:
                 f.write(json.dumps(self._profile_doc(), indent=1))
+        if TRACER.enabled:
+            # after the worker merges above: the sidecar is the MERGED
+            # coordinator+worker timeline on one wall clock
+            TRACER.dump(self.path / "dxt.json")
         if self._committer is not None:
             self._committer.check_error()       # background commit failures
         if errors:

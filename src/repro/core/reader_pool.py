@@ -38,6 +38,8 @@ import threading
 from collections import deque
 from typing import Callable, Optional
 
+from repro.core.dxt import TRACER
+
 
 class ReadBatch:
     """Completion tracker for one caller's group of tasks: its own
@@ -128,7 +130,8 @@ class ReaderPool:
                     return
             fn, args, batch = task
             try:
-                fn(*args)
+                with TRACER.span("read_task", rank=i):
+                    fn(*args)
             except BaseException as e:        # noqa: BLE001 — raised at barrier
                 with self._cond:
                     if batch is not None:

@@ -19,8 +19,11 @@ of `BpReader` that the ROADMAP's "millions of users" plane calls for:
 The split mirrors the hyadmin gateway/server/admin layering (SNIPPETS §2):
 the GATEWAY owns connections, framing and per-connection pre-provisioned
 response rings; the SERVER owns the readers, the pool and the cache; the
-ADMIN surface (`stats`, `ping`, `shutdown`) is how operators and the CLI
-observe and drive a running daemon.
+ADMIN surface (`stats`, `ping`, `watch`, `shutdown`) is how operators and
+the CLI observe and drive a running daemon — `watch` streams periodic
+counter DELTAS (SERVICE_*/TRANSPORT_*/POSIX_* + cache + DXT stats) over
+the same framed protocol, the live feed the ROADMAP's autotuning
+controller reads next.
 
 What the daemon adds over N independent readers:
 
@@ -58,6 +61,7 @@ import pathlib
 import socket
 import struct
 import threading
+import time
 import weakref
 from collections import OrderedDict
 from typing import Any, Optional, Union
@@ -67,11 +71,21 @@ import numpy as np
 from repro.core.bp_engine import BpReader
 from repro.core.compression import CorruptPayloadError
 from repro.core.darshan import MONITOR
+from repro.core.dxt import TRACER
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
                                       unlink_rings)
 
 DEFAULT_CACHE_BYTES = 256 * 1024 ** 2
 FRAME = struct.Struct("<II")             # json header bytes, binary body bytes
+
+# the counter families `stats` reports and `watch` streams deltas of — one
+# list, so a watch's begin + Σ(deltas) always reconciles against --stats
+WATCH_COUNTERS = ("SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS",
+                  "SERVICE_COALESCED", "SERVICE_SHM_BYTES",
+                  "SERVICE_SOCKET_BYTES", "TRANSPORT_SHM_BYTES",
+                  "TRANSPORT_PICKLE_FALLBACK_BYTES",
+                  "POSIX_READS", "POSIX_WRITES",
+                  "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN")
 
 
 # ---------------------------------------------------------------------- errors
@@ -201,7 +215,9 @@ class ChunkCache:
                     raise fl.error
                 return fl.result
             try:
-                arr = fetch()
+                with TRACER.span("cache_fetch", path=series) as sp:
+                    arr = fetch()
+                    sp.length = arr.nbytes
                 if arr.flags.writeable:        # cached objects are shared
                     arr = arr.copy()
                 arr.flags.writeable = False
@@ -255,6 +271,7 @@ class SeriesServer:
 
     def __init__(self, series=(), *, cache_bytes: int = DEFAULT_CACHE_BYTES,
                  parallel: int = 0, open_any: bool = False):
+        self.t0 = time.time()
         self.cache = ChunkCache(cache_bytes)
         self.parallel = int(parallel)
         self.registered = {str(pathlib.Path(str(s)).resolve())
@@ -318,16 +335,21 @@ class SeriesServer:
                               tuple(ext) if ext is not None else None)
         raise ValueError(f"unknown op {op!r}")
 
+    def counters(self) -> dict:
+        """Absolute values of the watched counter families — the ONE
+        source both `stats` and the `watch` delta stream read, so they
+        can never disagree."""
+        tot = MONITOR.report()["total"]
+        return {k: tot.get(k, 0.0) for k in WATCH_COUNTERS}
+
     def stats(self) -> dict:
         with self._lock:
             series = sorted(self._readers)
-        tot = MONITOR.report()["total"]
         return {"series": series, "cache": self.cache.stats(),
                 "parallel": self.parallel,
-                "counters": {k: tot.get(k, 0.0) for k in
-                             ("SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS",
-                              "SERVICE_COALESCED", "SERVICE_SHM_BYTES",
-                              "SERVICE_SOCKET_BYTES")}}
+                "uptime_s": time.time() - self.t0,
+                "dxt": TRACER.stats(),
+                "counters": self.counters()}
 
     def close(self):
         with self._lock:
@@ -368,6 +390,7 @@ class JbpDaemon:
         self._listener.listen(64)
         self._stopping = threading.Event()
         self._lock = threading.Lock()
+        self._conn_seq = 0                     # trace tid <-> connection
         self._conns: list[socket.socket] = []
         self._threads: list[threading.Thread] = []
         self._rings: list[ShmRing] = []
@@ -449,6 +472,9 @@ class JbpDaemon:
     def _serve_conn(self, conn: socket.socket):
         ring: Optional[ShmRing] = None
         use_shm = False
+        with self._lock:
+            self._conn_seq += 1
+            cid = self._conn_seq               # rank/tid of this connection
         try:
             while True:
                 try:
@@ -479,8 +505,15 @@ class JbpDaemon:
                     send_msg(conn, {"ok": True, "stopping": True})
                     threading.Thread(target=self.stop, daemon=True).start()
                     break
+                if op == "watch":
+                    try:
+                        self._serve_watch(conn, hdr)
+                    except OSError:
+                        break                  # client went away mid-stream
+                    continue
                 try:
-                    res = self.server.query(hdr)
+                    with TRACER.span("serve", path=str(op), rank=cid):
+                        res = self.server.query(hdr)
                 except BaseException as e:     # noqa: BLE001 — conn survives
                     send_msg(conn, {"ok": False,
                                     "error": {"kind": _error_kind(e),
@@ -502,6 +535,36 @@ class JbpDaemon:
                 with self._lock:
                     if ring in self._rings:
                         self._rings.remove(ring)
+
+    def _serve_watch(self, conn: socket.socket, hdr: dict):
+        """The live metrics stream: one "watch" request, many response
+        frames on the same framed protocol. Frame sequence:
+
+            {"ok": true, "watch": {"begin": <abs counters>, ...}}
+            {"ok": true, "frame": {"seq", "t", "counters", "delta",
+                                   "cache", "dxt"}}        x count
+            {"ok": true, "done": true, "counters": <abs counters>}
+
+        Invariant (the autotuning contract): begin + Σ(frame deltas) ==
+        done counters == what `stats` reports at that moment — `counters`
+        is the same `SeriesServer.counters()` everywhere."""
+        interval = max(0.01, float(hdr.get("interval_s", 1.0)))
+        count = max(1, min(int(hdr.get("count", 2)), 100000))
+        prev = self.server.counters()
+        send_msg(conn, {"ok": True, "watch": {"begin": prev,
+                                              "interval_s": interval,
+                                              "count": count}})
+        for seq in range(count):
+            if self._stopping.wait(interval):
+                break                          # daemon stopping: end early
+            cur = self.server.counters()
+            send_msg(conn, {"ok": True, "frame": {
+                "seq": seq, "t": time.time(), "counters": cur,
+                "delta": {k: cur[k] - prev.get(k, 0.0) for k in cur},
+                "cache": self.server.cache.stats(),
+                "dxt": TRACER.stats()}})
+            prev = cur
+        send_msg(conn, {"ok": True, "done": True, "counters": prev})
 
     def _send_array(self, conn, ring: Optional[ShmRing], arr: np.ndarray,
                     series: str):
@@ -654,6 +717,48 @@ class SeriesClient:
     def stats(self) -> dict:
         hdr, _ = self._call({"op": "stats"})
         return hdr["result"]
+
+    def watch(self, interval_s: float = 1.0, count: int = 2,
+              on_frame=None) -> dict:
+        """Stream `count` periodic counter-delta frames from the daemon
+        (the `watch` op). Returns {"begin": <abs counters>, "frames":
+        [frame, ...], "end": <abs counters>}; `on_frame(frame)` is called
+        live per frame (the CLI prints from it). Blocking — the connection
+        is dedicated to the stream until "done" arrives."""
+        with self._lock:
+            if self._sock is None:
+                self._connect()
+            try:
+                send_msg(self._sock, {"op": "watch",
+                                      "interval_s": float(interval_s),
+                                      "count": int(count)})
+                frames: list[dict] = []
+                begin = None
+                while True:
+                    hdr, _ = recv_msg(self._sock)
+                    if hdr is None:
+                        raise DaemonDisconnectedError(
+                            f"jbpd at {self.address!r} closed the "
+                            f"connection mid-watch")
+                    if not hdr.get("ok"):
+                        err = hdr.get("error", {})
+                        raise JbpdRequestError(err.get("kind", "error"),
+                                               err.get("msg", "watch failed"))
+                    if "watch" in hdr:
+                        begin = hdr["watch"]["begin"]
+                        continue
+                    if hdr.get("done"):
+                        return {"begin": begin, "frames": frames,
+                                "end": hdr.get("counters")}
+                    frames.append(hdr["frame"])
+                    if on_frame is not None:
+                        on_frame(hdr["frame"])
+            except (OSError, DaemonDisconnectedError) as e:
+                self._drop()
+                if isinstance(e, DaemonDisconnectedError):
+                    raise
+                raise DaemonDisconnectedError(
+                    f"jbpd at {self.address!r} went away mid-watch") from e
 
     def shutdown(self):
         """Admin: ask the daemon to stop (the response races the daemon's

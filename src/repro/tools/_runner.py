@@ -75,7 +75,7 @@ def io_report(prog: str):
           file=sys.stderr)
     for k in ("POSIX_OPENS", "POSIX_READS", "POSIX_BYTES_READ",
               "POSIX_WRITES", "POSIX_BYTES_WRITTEN", "POSIX_SEEKS",
-              "POSIX_FSYNCS"):
+              "POSIX_FLUSHES", "POSIX_FSYNCS", "POSIX_CLOSES"):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.0f}", file=sys.stderr)
     for k in ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME"):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.6f}s", file=sys.stderr)

@@ -18,7 +18,13 @@ SERVICE_COALESCED and SERVICE_SHM/SOCKET_BYTES.
 Admin mode (against a RUNNING daemon; `SERIES` args are not needed):
 
     python -m repro.tools.jbpd --socket /tmp/jbpd.sock --stats
+    python -m repro.tools.jbpd --socket /tmp/jbpd.sock --watch 5 --interval 2
     python -m repro.tools.jbpd --socket /tmp/jbpd.sock --shutdown
+
+`--watch N` streams N live counter-DELTA frames from the daemon (the
+`watch` op): each frame prints the non-zero deltas since the previous
+frame plus cache occupancy — `watch`'s begin + the streamed deltas always
+reconcile against a `--stats` taken at the same moment.
 
 Shares the `repro.tools._runner` conventions (exit codes, --io-report)
 with jbpls, jbprepack and jbpfsck.
@@ -64,6 +70,11 @@ def main(argv=None) -> int:
                     help="also serve valid series NOT listed at startup")
     ap.add_argument("--stats", action="store_true",
                     help="admin: query a running daemon's stats and exit")
+    ap.add_argument("--watch", type=int, default=None, metavar="N",
+                    help="admin: stream N live counter-delta frames from "
+                         "a running daemon and exit")
+    ap.add_argument("--interval", type=float, default=1.0, metavar="S",
+                    help="seconds between --watch frames (default 1.0)")
     ap.add_argument("--shutdown", action="store_true",
                     help="admin: stop a running daemon and exit")
     args = ap.parse_args(argv)
@@ -75,11 +86,25 @@ def main(argv=None) -> int:
     address = args.socket if args.socket else (args.host, args.port)
 
     # ------------------------------------------------------------ admin mode
-    if args.stats or args.shutdown:
+    if args.stats or args.shutdown or args.watch is not None:
         try:
             with SeriesClient(address, shm=False) as c:
                 if args.stats:
                     print(json.dumps(c.stats(), indent=1))
+                if args.watch is not None:
+                    def show(frame):
+                        deltas = {k: v for k, v in frame["delta"].items()
+                                  if v}
+                        cache = frame["cache"]
+                        print(f"jbpd watch #{frame['seq']}: "
+                              f"{json.dumps(deltas) if deltas else 'idle'} "
+                              f"cache={cache['entries']}e/"
+                              f"{cache['bytes']}B", flush=True)
+                    res = c.watch(interval_s=args.interval,
+                                  count=max(1, args.watch), on_frame=show)
+                    print(f"jbpd watch: {len(res['frames'])} frame(s); "
+                          f"end counters: "
+                          f"{json.dumps(res['end'])}", file=sys.stderr)
                 if args.shutdown:
                     c.shutdown()
                     print("jbpd: daemon stopping", file=sys.stderr)

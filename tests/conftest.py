@@ -5,6 +5,7 @@ import tempfile
 import pytest
 
 from repro.core.darshan import MONITOR
+from repro.core.dxt import TRACER
 
 
 @pytest.fixture()
@@ -18,3 +19,8 @@ def tmpdir_path():
 def fresh_monitor():
     MONITOR.reset()
     yield
+    # a test that enabled tracing must not leak it into the next test:
+    # TRACER is process-global exactly like MONITOR
+    if TRACER.enabled:
+        TRACER.disable()
+        TRACER.reset()

@@ -56,3 +56,90 @@ def test_access_size_histogram(tmpdir_path):
     hist = MONITOR.report()["access_size_histogram"]
     assert hist.get("0-100") == 1
     assert hist.get("1024-10240") == 1
+
+
+def test_flush_and_close_are_real_counters(tmpdir_path):
+    """flush() used to be invisible and close() recorded POSIX_STATS with
+    inc=0.0 — both are first-class metadata ops now."""
+    MONITOR.reset()
+    with open_file(tmpdir_path / "f.bin", "wb") as f:
+        f.write(b"x" * 10)
+        f.flush()
+        f.flush()
+    tot = MONITOR.report()["total"]
+    assert tot["POSIX_FLUSHES"] == 2
+    assert tot["POSIX_CLOSES"] == 1
+    assert tot.get("POSIX_STATS", 0.0) == 0.0
+    assert tot["F_META_TIME"] > 0                # flush/close time attributed
+
+
+def test_report_n_procs_normalization(tmpdir_path):
+    """Aggregated writes are attributed to aggregator ids, so 'observed
+    ranks' undercounts the job; n_procs must normalize by the REAL count."""
+    MONITOR.reset()
+    for r in range(2):                # 2 aggregators acting for 8 ranks
+        with open_file(tmpdir_path / f"data.{r}", "wb", rank=r) as f:
+            f.write(b"z" * 400)
+    rep_observed = MONITOR.report()
+    assert rep_observed["n_ranks"] == 2
+    assert rep_observed["avg_per_process"]["POSIX_BYTES_WRITTEN"] == 400.0
+    rep8 = MONITOR.report(n_procs=8)
+    assert rep8["avg_per_process"]["POSIX_BYTES_WRITTEN"] == 100.0
+    # totals are NOT normalized — only the per-process view
+    assert rep8["total"]["POSIX_BYTES_WRITTEN"] == 800.0
+    assert (MONITOR.cost_per_process(8)["write_s"] * 8
+            == MONITOR.report()["total"]["F_WRITE_TIME"])
+
+
+def test_parser_dump_structural_roundtrip(tmpdir_path):
+    """One block per counter family: POSIX + TIME totals, TRANSPORT_*,
+    SERVICE_*, per-file records, the histogram, and the DXT summary —
+    parsed back line-by-line against report()."""
+    MONITOR.reset()
+    with open_file(tmpdir_path / "x.bin", "wb", rank=1) as f:
+        f.write(b"q" * 2048)
+        f.flush()
+        f.fsync()
+    MONITOR.record(1, "transport", "TRANSPORT_SHM_BYTES", inc=4096.0)
+    MONITOR.record(0, "served", "SERVICE_CACHE_HIT", inc=3.0)
+    dump = MONITOR.parser_dump(n_procs=4)
+    lines = dump.splitlines()
+    assert "# nprocs: 4" in dump
+
+    totals = {}
+    for ln in lines:
+        if ln.startswith("total_"):
+            k, v = ln.split("\t")
+            totals[k[len("total_"):]] = float(v)
+    # every family is present...
+    for k in ("POSIX_OPENS", "POSIX_WRITES", "POSIX_FLUSHES", "POSIX_CLOSES",
+              "POSIX_BYTES_WRITTEN", "F_WRITE_TIME", "F_META_TIME",
+              "TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES",
+              "SERVICE_CACHE_HIT", "SERVICE_SOCKET_BYTES"):
+        assert k in totals, k
+    # ...and every value round-trips report()'s totals exactly
+    tot = MONITOR.report()["total"]
+    for k, v in totals.items():
+        assert v == round(tot.get(k, 0.0), 6), k
+    assert totals["TRANSPORT_SHM_BYTES"] == 4096.0
+    assert totals["SERVICE_CACHE_HIT"] == 3.0
+
+    # per-file record block and histogram
+    assert f"file\t{tmpdir_path / 'x.bin'}" in dump
+    assert any(ln.startswith("hist\t1024-10240") for ln in lines)
+    # DXT summary block is always present (disabled here)
+    assert "dxt_enabled\t0" in dump
+    assert "dxt_events\t0" in dump
+    assert "dxt_dropped\t0" in dump
+
+
+def test_parser_dump_dxt_section_counts_ops(tmpdir_path):
+    from repro.core.dxt import TRACER
+    MONITOR.reset()
+    TRACER.enable()
+    with open_file(tmpdir_path / "y.bin", "wb") as f:
+        f.write(b"k" * 64)
+    dump = MONITOR.parser_dump()
+    assert "dxt_enabled\t1" in dump
+    assert "dxt_op\twrite\t1" in dump
+    assert "dxt_op\topen\t1" in dump

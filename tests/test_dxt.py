@@ -1,0 +1,369 @@
+"""DXT per-operation tracing: ring buffers, cross-process merge, exports,
+the jbpdxt CLI, and the jbpd live `watch` metrics stream."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import MONITOR, open_file
+from repro.core.dxt import (DxtTracer, SPAN_OPS, TRACER, load_trace,
+                            to_chrome, to_dxt_text)
+from repro.core.parallel_engine import ParallelBpWriter
+from repro.serve.jbpd import JbpDaemon, SeriesClient, SeriesServer
+from repro.tools.jbpdxt import bandwidth_bins, main as jbpdxt_main, summarize
+
+
+# ------------------------------------------------------------------ unit: ring
+def test_disabled_tracer_records_nothing():
+    tr = DxtTracer()
+    tr.record(0, "x", "write", 0, 10, 0.0, 1.0)
+    with tr.span("commit", path="y") as sp:
+        sp.length = 5
+    assert tr.stats()["events"] == 0
+    assert tr.events() == []
+
+
+def test_ring_buffer_drops_oldest_and_counts():
+    tr = DxtTracer(capacity=4)
+    tr.enable()
+    for i in range(10):
+        tr.record(0, "f", "write", i * 8, 8, float(i), float(i) + 0.5)
+    snap = tr.snapshot()
+    assert len(snap["events"]) == 4
+    assert snap["dropped"] == 6
+    # the SURVIVORS are the newest events
+    assert [e[5] for e in snap["events"]] == [6.0, 7.0, 8.0, 9.0]
+    assert tr.stats()["dropped"] == 6
+
+
+def test_snapshot_reset_clears_buffers():
+    tr = DxtTracer()
+    tr.enable()
+    tr.record(0, "f", "write", 0, 8, 1.0, 2.0)
+    s1 = tr.snapshot(reset=True)
+    assert len(s1["events"]) == 1
+    assert tr.snapshot()["events"] == []
+
+
+def test_ingest_rebases_onto_wall_clock():
+    """Two processes with different perf_counter origins must land on one
+    wall-clock axis: event at the SAME wall instant -> same merged t0."""
+    host = DxtTracer()
+    host.enable()
+    # a "remote" snapshot whose perf_counter origin is wildly different:
+    # its epoch says perf=1000.0 corresponds to wall=W
+    wall = host.epoch[0] - host.epoch[1]  # host shift
+    snap = {"src": "worker", "epoch": [123456.0, 1000.0], "dropped": 2,
+            "events": [[1, "data.1", "write", 0, 64, 1001.0, 1001.5]]}
+    host.ingest(snap)
+    evs = host.events()
+    assert len(evs) == 1
+    src, rank, path, op, off, ln, t0, t1 = evs[0]
+    assert src == "worker" and rank == 1
+    # rebased: wall = perf + (epoch_wall - epoch_perf)
+    assert t0 == pytest.approx(123456.0 + 1.0)
+    assert t1 - t0 == pytest.approx(0.5)
+    assert host.dropped() == 2
+    assert wall != 123456.0 - 1000.0  # the test is meaningful
+
+
+def test_span_sets_length_inside_block():
+    tr = DxtTracer()
+    tr.enable()
+    with tr.span("transport", path="ring", rank=3) as sp:
+        sp.length = 4096
+    (rank, path, op, off, ln, t0, t1), = tr.snapshot()["events"]
+    assert (rank, path, op, ln) == (3, "ring", "transport", 4096)
+    assert t1 >= t0
+
+
+def test_threaded_records_land_in_per_thread_buffers():
+    tr = DxtTracer()
+    tr.enable()
+
+    def work(k):
+        for i in range(100):
+            tr.record(k, f"f{k}", "write", i, 1, float(i), float(i))
+
+    ts = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert tr.stats()["events"] == 400
+    assert tr.stats()["dropped"] == 0
+
+
+# ----------------------------------------------------- instrumented file trace
+def test_instrumented_file_traces_every_op_with_offsets(tmpdir_path):
+    TRACER.enable()
+    p = tmpdir_path / "x.bin"
+    f = open_file(p, "wb", rank=2)
+    f.write(b"a" * 100)
+    f.write(b"b" * 50)
+    f.fsync()
+    f.close()
+    r = open_file(p, "rb", rank=2)
+    r.seek(100)
+    assert r.read(50) == b"b" * 50
+    r.close()
+    evs = [e for e in TRACER.events() if e[2] == str(p)]
+    ops = [(e[3], e[4], e[5]) for e in evs]     # (op, offset, length)
+    assert ("open", 0, 0) in ops
+    assert ("write", 0, 100) in ops
+    assert ("write", 100, 50) in ops            # position tracked
+    assert ("fsync", 150, 0) in ops
+    assert ("close", 150, 0) in ops
+    assert ("seek", 100, 0) in ops
+    assert ("read", 100, 50) in ops             # offset from the seek
+    assert all(e[1] == 2 for e in evs)          # rank attribution
+
+
+# ------------------------------------------------- the W=2 acceptance scenario
+@pytest.mark.slow
+def test_parallel_w2_async_commit_merged_trace(tmpdir_path):
+    """The ISSUE acceptance: W=2 ParallelBpWriter(async_commit=True) with
+    tracing on -> ONE merged trace, worker+coordinator events monotonic on
+    one clock, span coverage >= {compress, transport, seal, commit}, and
+    per-subfile trace byte totals == the Darshan counters exactly."""
+    TRACER.enable()
+    p = tmpdir_path / "series"
+    with ParallelBpWriter(p, n_ranks=4, n_writers=2,
+                          async_commit=True) as w:
+        for s in range(3):
+            w.begin_step(s)
+            for r in range(4):
+                w.put("T", np.full((16, 8), r, np.float64),
+                      global_shape=(64, 8), offset=(r * 16, 0), rank=r)
+            w.end_step()
+        w.drain()
+
+    evs = TRACER.events()
+    srcs = {e[0] for e in evs}
+    assert len(srcs) >= 3                   # coordinator + both workers
+    assert {"compress", "transport", "seal", "commit"} <= {e[3] for e in evs}
+    # one clock: merged timeline is sorted and every event is well-formed
+    t0s = [e[6] for e in evs]
+    assert t0s == sorted(t0s)
+    assert all(e[7] >= e[6] for e in evs)
+    # worker events (foreign src) INTERLEAVE with coordinator events in
+    # wall time — the rebase put them on one axis, not before/after
+    order = [e[0] for e in evs]
+    first_foreign = next(i for i, s in enumerate(order) if s != TRACER.src)
+    assert any(s == TRACER.src for s in order[first_foreign:])
+
+    # per-subfile byte parity with the darshan counters
+    files = MONITOR.report()["files"]
+    for sub in ("data.0", "data.1"):
+        fpath = str(p / sub)
+        trace_bytes = sum(e[5] for e in evs
+                          if e[3] == "write" and e[2] == fpath)
+        assert trace_bytes == files[fpath]["POSIX_BYTES_WRITTEN"]
+        assert trace_bytes > 0
+
+    # the dxt.json sidecar landed next to profiling.json and round-trips
+    doc = load_trace(p)
+    assert len(doc["events"]) == len(evs)
+
+    # reader still sees a valid series
+    with BpReader(p) as r:
+        assert r.read_var(2, "T").shape == (64, 8)
+
+
+# ---------------------------------------------------------------- the exports
+def _synthetic_events():
+    return [
+        ("pid1", 0, "data.0", "write", 0, 4096, 10.0, 10.5),
+        ("pid1", 0, "series", "commit", 0, 128, 10.6, 10.7),
+        ("pid2", 1, "data.1", "write", 0, 8192, 10.1, 10.4),
+        ("pid2", 1, "ost3/data.1.0", "write", 0, 256, 10.2, 10.3),
+    ]
+
+
+def test_chrome_export_structure():
+    ch = to_chrome(_synthetic_events(), dropped=7)
+    assert ch["otherData"]["dropped"] == 7
+    evs = ch["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    ms = [e for e in evs if e["ph"] == "M"]
+    assert len(xs) == 4 and len(ms) == 2        # 2 distinct pids
+    for e in xs:
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert isinstance(e["ts"], float) and isinstance(e["dur"], float)
+        assert e["dur"] > 0
+        assert set(("path", "offset", "length")) <= set(e["args"])
+    cats = {e["name"]: e["cat"] for e in xs}
+    assert cats["write"] == "posix" and cats["commit"] == "span"
+    # pid/tid mapping: same src -> same pid; rank -> tid
+    by_src = {}
+    for e in ms:
+        by_src[e["args"]["name"]] = e["pid"]
+    assert by_src["pid1"] != by_src["pid2"]
+
+
+def test_dxt_text_format():
+    txt = to_dxt_text(_synthetic_events(), dropped=1)
+    assert "# DXT, file_name: data.0" in txt
+    assert "X_POSIX" in txt and "X_SPAN" in txt
+    assert "dropped: 1" in txt
+    # one X_POSIX line per posix op, fields tab-separated
+    posix = [l for l in txt.splitlines() if l.startswith(" X_POSIX")]
+    assert len(posix) == 3
+    parts = posix[0].split("\t")
+    assert len(parts) == 8                      # module..end
+    int(parts[1]); int(parts[3]); int(parts[4]); int(parts[5])
+    float(parts[6]); float(parts[7])
+
+
+def test_summarize_and_bandwidth_bins():
+    summ = summarize(_synthetic_events(), dropped=3)
+    assert summ["dropped"] == 3
+    assert summ["ops"]["write"]["count"] == 3
+    assert summ["files"]["data.0"]["bytes_written"] == 4096
+    assert summ["files"]["ost3/data.1.0"]["ost"] == 3
+    assert "series" not in summ["files"]        # spans are not file records
+    bins = bandwidth_bins(_synthetic_events(), 10)
+    assert sum(b for _, b in bins) == 4096 + 8192 + 256
+
+
+# ------------------------------------------------------------------ jbpdxt CLI
+def test_jbpdxt_cli_on_traced_series(tmpdir_path, capsys):
+    TRACER.enable()
+    p = tmpdir_path / "series"
+    with_profiling = EngineConfig(profiling=True)
+    w = BpWriter(p, n_ranks=2, cfg=with_profiling)
+    for s in range(2):
+        w.begin_step(s)
+        for r in range(2):
+            w.put("rho", np.ones((32,)) * r, global_shape=(64,),
+                  offset=(r * 32,), rank=r)
+        w.end_step()
+    w.close()
+    assert (p / "dxt.json").exists()
+
+    chrome = tmpdir_path / "trace.json"
+    dxt_txt = tmpdir_path / "trace.txt"
+    rc = jbpdxt_main([str(p), "--chrome", str(chrome), "--dxt", str(dxt_txt),
+                      "--bins", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "timeline summary" in out
+    assert "straggler" in out
+    assert "bandwidth over time" in out
+    ch = json.loads(chrome.read_text())
+    assert any(e["ph"] == "X" for e in ch["traceEvents"])
+    assert "X_POSIX" in dxt_txt.read_text()
+
+    # --json agrees with the darshan counter for the subfile
+    rc = jbpdxt_main([str(p), "--json"])
+    assert rc == 0
+    summ = json.loads(capsys.readouterr().out)
+    files = MONITOR.report()["files"]
+    sub = str(p / "data.0")
+    assert summ["files"][sub]["bytes_written"] == \
+        files[sub]["POSIX_BYTES_WRITTEN"]
+
+
+def test_jbpdxt_cli_no_trace_is_usage_error(tmpdir_path, capsys):
+    assert jbpdxt_main([str(tmpdir_path)]) == 2
+    assert "no trace found" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------- jbpd watch op
+def _write_series(p, steps=2):
+    w = BpWriter(p, n_ranks=2)
+    for s in range(steps):
+        w.begin_step(s)
+        for r in range(2):
+            w.put("T", np.full((128,), r, np.float64), global_shape=(256,),
+                  offset=(r * 128,), rank=r)
+        w.end_step()
+    w.close()
+    return p
+
+
+def test_watch_streams_deltas_that_sum_to_stats(tmpdir_path):
+    series = _write_series(tmpdir_path / "s")
+    sock = str(tmpdir_path / "jbpd.sock")
+    server = SeriesServer([str(series)])
+    with JbpDaemon(server, socket_path=sock).start():
+        stop = threading.Event()
+
+        def traffic():
+            c = SeriesClient(sock, series=str(series))
+            while not stop.is_set():
+                c.read_var(1, "T")
+                time.sleep(0.02)
+            c.close()
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            wc = SeriesClient(sock, shm=False)
+            seen = []
+            res = wc.watch(interval_s=0.1, count=3, on_frame=seen.append)
+            assert len(res["frames"]) >= 2          # >= 2 delta frames
+            assert seen == res["frames"]            # live callback fired
+            # begin + sum(deltas) == end == the final frame's absolutes
+            acc = dict(res["begin"])
+            for fr in res["frames"]:
+                for k, v in fr["delta"].items():
+                    acc[k] = acc.get(k, 0.0) + v
+            assert acc == res["end"]
+            assert res["end"] == res["frames"][-1]["counters"]
+            # traffic actually moved the counters
+            total_delta = sum(sum(fr["delta"].values())
+                              for fr in res["frames"])
+            assert total_delta > 0
+        finally:
+            stop.set()
+            t.join()
+        # --stats sees the SAME counter families (superset in time)
+        st = wc.stats()
+        assert set(st["counters"]) == set(res["end"])
+        for k in res["end"]:
+            assert st["counters"][k] >= res["end"][k] - 1e-9
+        assert st["uptime_s"] > 0
+        assert "dxt" in st and set(st["dxt"]) == {"enabled", "events",
+                                                  "dropped", "capacity"}
+        wc.close()
+
+
+def test_watch_frames_carry_cache_and_dxt_stats(tmpdir_path):
+    series = _write_series(tmpdir_path / "s")
+    sock = str(tmpdir_path / "jbpd.sock")
+    with JbpDaemon(SeriesServer([str(series)]), socket_path=sock).start():
+        wc = SeriesClient(sock, shm=False)
+        res = wc.watch(interval_s=0.05, count=2)
+        for fr in res["frames"]:
+            assert "cache" in fr and "entries" in fr["cache"]
+            assert "dxt" in fr and "enabled" in fr["dxt"]
+            assert fr["t"] > 0
+        wc.close()
+
+
+# ------------------------------------------------ heatmap epoch rebase (fix)
+def test_heatmap_merge_rebases_different_start_times():
+    """Regression: two monitors started at different times used to be
+    superimposed at bin 0; merge() must rebase via the shipped epoch."""
+    from repro.core.darshan import DarshanMonitor
+    m1 = DarshanMonitor()
+    m2 = DarshanMonitor()
+    # m2 started 0.35s after m1 (deterministic: pin the epochs)
+    m2._t0_epoch = m1._t0_epoch + 0.35
+    m2.record(0, "f", "POSIX_WRITES", 1.0, "F_WRITE_TIME", 0.0, nbytes=512)
+    snap = m2.snapshot()
+    assert any(b == 0 for _r, b, _v in snap["heatmap"])  # at ITS bin 0
+    m1.merge(snap)
+    hm = m1.heatmap()
+    # 0.35s / 0.1s bins -> bin 3 on m1's axis, NOT bin 0
+    assert hm == {"rank0@0.3s": 512}
+
+
+def test_heatmap_merge_legacy_snapshot_keeps_raw_bins():
+    from repro.core.darshan import DarshanMonitor
+    m = DarshanMonitor()
+    m.merge({"per_rank": {}, "per_file": {}, "size_hist": {},
+             "heatmap": [[1, 2, 64.0]]})        # pre-epoch snapshot shape
+    assert m.heatmap() == {"rank1@0.2s": 64.0}
