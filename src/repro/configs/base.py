@@ -102,7 +102,9 @@ _REGISTRY: dict[str, ModelConfig] = {}
 
 
 def register(cfg: ModelConfig) -> ModelConfig:
-    assert cfg.family in FAMILIES, cfg.family
+    if cfg.family not in FAMILIES:
+        raise ValueError(f"unknown model family {cfg.family!r} for "
+                         f"{cfg.name!r}; known families: {FAMILIES}")
     _REGISTRY[cfg.name] = cfg
     return cfg
 

@@ -105,7 +105,9 @@ class SubfileSet:
         """Durability barrier for one subfile (parallel prepare phase)."""
         self._check_owned(agg_id)
         with self._locks[agg_id]:
-            self._files[agg_id].fsync()
+            # fsync under the per-subfile lock is the point: the barrier
+            # must order against concurrent appends to the same subfile
+            self._files[agg_id].fsync()   # jbplint: disable=JBP004
 
     def fsync_close(self):
         for f in self._files.values():

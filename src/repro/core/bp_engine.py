@@ -215,9 +215,11 @@ class BpWriter:
         if cfg.stripe is not None:
             ost_pool = OstPool(self.path, cfg.n_osts)
             for i in range(self.m):
-                (self.path / f"data.{i}.stripe.json").write_text(json.dumps(
-                    {"stripe_count": cfg.stripe.stripe_count,
-                     "stripe_size": cfg.stripe.stripe_size}))
+                with open_file(self.path / f"data.{i}.stripe.json", "w",
+                               rank=0) as sf:
+                    sf.write(json.dumps(
+                        {"stripe_count": cfg.stripe.stripe_count,
+                         "stripe_size": cfg.stripe.stripe_size}))
         self.subfiles = SubfileSet(self.path, self.m, stripe=cfg.stripe,
                                    ost_pool=ost_pool)
         self._md = open_file(self.path / "md.0", "wb", rank=0)
@@ -619,8 +621,12 @@ class BpReader:
             # stripe params are discoverable from the writer config file; for
             # robustness store them alongside: meta sidecar
             side = self.path / f"data.{agg}.stripe.json"
-            cfgd = json.loads(side.read_text()) if side.exists() else {
-                "stripe_count": len(objs), "stripe_size": C.DEFAULT_BLOCK}
+            if side.exists():
+                with open_file(side, "r") as sf:
+                    cfgd = json.loads(sf.read())
+            else:
+                cfgd = {"stripe_count": len(objs),
+                        "stripe_size": C.DEFAULT_BLOCK}
             pool = OstPool(self.path, n_osts)
             f = StripedFile(pool, f"data.{agg}",
                             StripeConfig(cfgd["stripe_count"],

@@ -11,6 +11,7 @@ Thread-safe: aggregator writer pools hammer this concurrently.
 """
 from __future__ import annotations
 
+import difflib
 import os
 import threading
 import time
@@ -19,24 +20,82 @@ from typing import Optional
 
 from repro.core.dxt import TRACER
 
+
+class _FrozenCounterRegistry:
+    """The single source of truth for every legal counter name. A typo'd
+    literal at a call site used to silently mint a brand-new counter —
+    now `record()` validates against `KNOWN_COUNTERS` at runtime, jbplint
+    (JBP003) keeps call sites on these constants statically, and the
+    namespace itself is frozen so nobody grows it from the outside."""
+
+    # POSIX op/byte counters (darshan-parser names)
+    POSIX_OPENS = "POSIX_OPENS"
+    POSIX_READS = "POSIX_READS"
+    POSIX_WRITES = "POSIX_WRITES"
+    POSIX_SEEKS = "POSIX_SEEKS"
+    POSIX_FLUSHES = "POSIX_FLUSHES"
+    POSIX_FSYNCS = "POSIX_FSYNCS"
+    POSIX_CLOSES = "POSIX_CLOSES"
+    POSIX_STATS = "POSIX_STATS"
+    POSIX_BYTES_READ = "POSIX_BYTES_READ"
+    POSIX_BYTES_WRITTEN = "POSIX_BYTES_WRITTEN"
+    # per-class time accumulators (Fig-5-style read/write/meta attribution)
+    F_READ_TIME = "F_READ_TIME"
+    F_WRITE_TIME = "F_WRITE_TIME"
+    F_META_TIME = "F_META_TIME"
+    # chunk-transport accounting for the parallel write plane: bytes that
+    # moved coordinator->worker through shared-memory rings vs the pickle
+    # fallback (recorded by the WORKER, shipped home on its ack and merged)
+    TRANSPORT_SHM_BYTES = "TRANSPORT_SHM_BYTES"
+    TRANSPORT_PICKLE_FALLBACK_BYTES = "TRANSPORT_PICKLE_FALLBACK_BYTES"
+    # served-read accounting for the jbpd data service: decompressed-chunk
+    # cache hits/misses, requests COALESCED onto another client's in-flight
+    # fetch, and response bytes handed off zero-copy via ShmRing vs framed
+    SERVICE_CACHE_HIT = "SERVICE_CACHE_HIT"
+    SERVICE_CACHE_MISS = "SERVICE_CACHE_MISS"
+    SERVICE_COALESCED = "SERVICE_COALESCED"
+    SERVICE_SHM_BYTES = "SERVICE_SHM_BYTES"
+    SERVICE_SOCKET_BYTES = "SERVICE_SOCKET_BYTES"
+    # DXT trace summary fields (parser_dump / jbpd watch frames). These are
+    # REPORT keys, never recorded directly, so they are excluded from
+    # KNOWN_COUNTERS below.
+    DXT_ENABLED = "dxt_enabled"
+    DXT_EVENTS = "dxt_events"
+    DXT_DROPPED = "dxt_dropped"
+    DXT_OP = "dxt_op"
+
+    def __setattr__(self, name, value):
+        raise AttributeError(
+            "the counter registry is frozen — add new counters in "
+            "repro.core.darshan._FrozenCounterRegistry, not at call sites")
+
+
+CTR = _FrozenCounterRegistry()
+
+#: every name `record()` accepts (the recordable counter families)
+KNOWN_COUNTERS = frozenset(
+    v for k, v in vars(_FrozenCounterRegistry).items()
+    if k.isupper() and isinstance(v, str) and not v.startswith("dxt_"))
+
+
+def _unknown_counter(name) -> str:
+    close = difflib.get_close_matches(str(name), sorted(KNOWN_COUNTERS), n=1)
+    hint = f" — did you mean {close[0]!r}?" if close else ""
+    return (f"unknown Darshan counter {name!r}; counters are frozen in "
+            f"repro.core.darshan.CTR{hint}")
+
+
 _COUNTER_KEYS = (
-    "POSIX_OPENS", "POSIX_READS", "POSIX_WRITES", "POSIX_SEEKS",
-    "POSIX_FLUSHES", "POSIX_FSYNCS", "POSIX_CLOSES", "POSIX_STATS",
-    "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN",
+    CTR.POSIX_OPENS, CTR.POSIX_READS, CTR.POSIX_WRITES, CTR.POSIX_SEEKS,
+    CTR.POSIX_FLUSHES, CTR.POSIX_FSYNCS, CTR.POSIX_CLOSES, CTR.POSIX_STATS,
+    CTR.POSIX_BYTES_READ, CTR.POSIX_BYTES_WRITTEN,
 )
-_TIME_KEYS = ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME")
-# chunk-transport accounting for the parallel write plane: bytes that moved
-# coordinator->worker through shared-memory rings vs the pickle fallback
-# (recorded by the WORKER, shipped home on its "finished"/"closed" ack and
-# merged — like every other worker-process counter)
-_TRANSPORT_KEYS = ("TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES")
-# served-read accounting for the jbpd data service: decompressed-chunk
-# cache hits/misses, requests that COALESCED onto another client's
-# in-flight fetch instead of reading+decompressing again, and response
-# bytes handed off zero-copy through an ShmRing vs framed down the socket
-_SERVICE_KEYS = ("SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS",
-                 "SERVICE_COALESCED", "SERVICE_SHM_BYTES",
-                 "SERVICE_SOCKET_BYTES")
+_TIME_KEYS = (CTR.F_READ_TIME, CTR.F_WRITE_TIME, CTR.F_META_TIME)
+_TRANSPORT_KEYS = (CTR.TRANSPORT_SHM_BYTES,
+                   CTR.TRANSPORT_PICKLE_FALLBACK_BYTES)
+_SERVICE_KEYS = (CTR.SERVICE_CACHE_HIT, CTR.SERVICE_CACHE_MISS,
+                 CTR.SERVICE_COALESCED, CTR.SERVICE_SHM_BYTES,
+                 CTR.SERVICE_SOCKET_BYTES)
 
 _SIZE_BINS = (100, 1024, 10 * 1024, 100 * 1024, 1024**2, 4 * 1024**2,
               10 * 1024**2, 100 * 1024**2)
@@ -75,6 +134,10 @@ class DarshanMonitor:
     # ------------------------------------------------------------------ record
     def record(self, rank: int, path: str, counter: str, inc: float = 1.0,
                tkey: Optional[str] = None, dt: float = 0.0, nbytes: int = 0):
+        if counter not in KNOWN_COUNTERS:
+            raise KeyError(_unknown_counter(counter))
+        if tkey is not None and tkey not in KNOWN_COUNTERS:
+            raise KeyError(_unknown_counter(tkey))
         with self._lock:
             r = self._per_rank[rank]
             f = self._per_file[path]
@@ -84,8 +147,8 @@ class DarshanMonitor:
                 r[tkey] += dt
                 f[tkey] += dt
             if nbytes:
-                bkey = ("POSIX_BYTES_WRITTEN" if "WRITE" in counter
-                        else "POSIX_BYTES_READ")
+                bkey = (CTR.POSIX_BYTES_WRITTEN if "WRITE" in counter
+                        else CTR.POSIX_BYTES_READ)
                 r[bkey] += nbytes
                 f[bkey] += nbytes
                 self._size_hist[_size_bin(nbytes)] += 1
@@ -225,10 +288,12 @@ class InstrumentedFile:
         self.rank = rank
         self.mon = monitor
         t0 = time.perf_counter()
-        self._f = open(self.path, mode)
+        # the one legitimate raw open(): this IS the instrumentation
+        # primitive every other file op routes through
+        self._f = open(self.path, mode)   # jbplint: disable=JBP002
         t1 = time.perf_counter()
         self._pos = self._f.tell()          # append modes start at EOF
-        self.mon.record(rank, self.path, "POSIX_OPENS", 1.0, "F_META_TIME",
+        self.mon.record(rank, self.path, CTR.POSIX_OPENS, 1.0, CTR.F_META_TIME,
                         t1 - t0)
         if TRACER.enabled:
             TRACER.record(rank, self.path, "open", self._pos, 0, t0, t1)
@@ -240,8 +305,8 @@ class InstrumentedFile:
         nb = n if isinstance(n, int) else len(data)
         off = self._pos
         self._pos = off + nb
-        self.mon.record(self.rank, self.path, "POSIX_WRITES", 1.0,
-                        "F_WRITE_TIME", t1 - t0, nbytes=nb)
+        self.mon.record(self.rank, self.path, CTR.POSIX_WRITES, 1.0,
+                        CTR.F_WRITE_TIME, t1 - t0, nbytes=nb)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "write", off, nb, t0, t1)
         return nb
@@ -252,8 +317,8 @@ class InstrumentedFile:
         t1 = time.perf_counter()
         off = self._pos
         self._pos = off + len(data)
-        self.mon.record(self.rank, self.path, "POSIX_READS", 1.0,
-                        "F_READ_TIME", t1 - t0, nbytes=len(data))
+        self.mon.record(self.rank, self.path, CTR.POSIX_READS, 1.0,
+                        CTR.F_READ_TIME, t1 - t0, nbytes=len(data))
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "read", off, len(data),
                           t0, t1)
@@ -264,8 +329,8 @@ class InstrumentedFile:
         r = self._f.seek(off, whence)
         t1 = time.perf_counter()
         self._pos = self._f.tell() if whence else off
-        self.mon.record(self.rank, self.path, "POSIX_SEEKS", 1.0,
-                        "F_META_TIME", t1 - t0)
+        self.mon.record(self.rank, self.path, CTR.POSIX_SEEKS, 1.0,
+                        CTR.F_META_TIME, t1 - t0)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "seek", self._pos, 0, t0, t1)
         return r
@@ -279,8 +344,8 @@ class InstrumentedFile:
         t0 = time.perf_counter()
         self._f.flush()
         t1 = time.perf_counter()
-        self.mon.record(self.rank, self.path, "POSIX_FLUSHES", 1.0,
-                        "F_META_TIME", t1 - t0)
+        self.mon.record(self.rank, self.path, CTR.POSIX_FLUSHES, 1.0,
+                        CTR.F_META_TIME, t1 - t0)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "flush", self._pos, 0, t0, t1)
 
@@ -289,8 +354,8 @@ class InstrumentedFile:
         self._f.flush()
         os.fsync(self._f.fileno())
         t1 = time.perf_counter()
-        self.mon.record(self.rank, self.path, "POSIX_FSYNCS", 1.0,
-                        "F_META_TIME", t1 - t0)
+        self.mon.record(self.rank, self.path, CTR.POSIX_FSYNCS, 1.0,
+                        CTR.F_META_TIME, t1 - t0)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "fsync", self._pos, 0, t0, t1)
 
@@ -298,8 +363,8 @@ class InstrumentedFile:
         t0 = time.perf_counter()
         self._f.close()
         t1 = time.perf_counter()
-        self.mon.record(self.rank, self.path, "POSIX_CLOSES", 1.0,
-                        "F_META_TIME", t1 - t0)
+        self.mon.record(self.rank, self.path, CTR.POSIX_CLOSES, 1.0,
+                        CTR.F_META_TIME, t1 - t0)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "close", self._pos, 0, t0, t1)
 

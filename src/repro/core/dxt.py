@@ -271,7 +271,9 @@ class DxtTracer:
         doc = {"format": "jbp-dxt-1", "generated": time.time(),
                "dropped": self.dropped(),
                "events": [list(e) for e in self.events()]}
-        with open(str(path), "w") as f:
+        # raw open() on purpose: the sidecar is the tracer's OWN output —
+        # routing it through InstrumentedFile would trace the trace dump
+        with open(str(path), "w") as f:   # jbplint: disable=JBP002
             json.dump(doc, f)
         return doc
 
@@ -282,7 +284,9 @@ def load_trace(path) -> dict:
     p = str(path)
     if os.path.isdir(p):
         p = os.path.join(p, "dxt.json")
-    with open(p) as f:
+    # raw open() on purpose: reading the tracer's own sidecar through
+    # InstrumentedFile would pollute the counters the trace is explaining
+    with open(p) as f:   # jbplint: disable=JBP002
         doc = json.load(f)
     if doc.get("format") != "jbp-dxt-1":
         raise ValueError(f"{p}: not a jbp DXT trace (format="

@@ -133,7 +133,8 @@ def iter_shard_records(path, w: int):
     p = shard_path(path, w)
     if not p.exists():
         return
-    raw = p.read_bytes()
+    with open_file(p, "rb") as f:
+        raw = f.read()
     off = 0
     while off + SHARD_HDR.size <= len(raw):
         step, ln, crc = SHARD_HDR.unpack_from(raw, off)
@@ -193,7 +194,7 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
     persistent worker ships per-series deltas); the coordinator merges it
     so `parser_dump` covers the whole write plane.
     """
-    from repro.core.darshan import MONITOR
+    from repro.core.darshan import CTR, MONITOR
 
     # orphan watchdog: a coordinator SIGKILLed (or OOM-killed) cannot tell
     # the workers anything — without this they would block on task_q.get()
@@ -316,10 +317,10 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             if ring is not None:
                 tkey = f"{spath}/transport"
                 if shm_bytes:
-                    MONITOR.record(w, tkey, "TRANSPORT_SHM_BYTES",
+                    MONITOR.record(w, tkey, CTR.TRANSPORT_SHM_BYTES,
                                    inc=shm_bytes)
                 if fallback_bytes:
-                    MONITOR.record(w, tkey, "TRANSPORT_PICKLE_FALLBACK_BYTES",
+                    MONITOR.record(w, tkey, CTR.TRANSPORT_PICKLE_FALLBACK_BYTES,
                                    inc=fallback_bytes)
             base = subfiles.append(w, b"".join(payloads))
             off = base
@@ -533,9 +534,11 @@ class ParallelBpWriter:
         if cfg.stripe is not None:
             OstPool(self.path, cfg.n_osts)      # create ost dirs up front
             for i in range(self.m):
-                (self.path / f"data.{i}.stripe.json").write_text(json.dumps(
-                    {"stripe_count": cfg.stripe.stripe_count,
-                     "stripe_size": cfg.stripe.stripe_size}))
+                with open_file(self.path / f"data.{i}.stripe.json", "w",
+                               rank=0) as sf:
+                    sf.write(json.dumps(
+                        {"stripe_count": cfg.stripe.stripe_count,
+                         "stripe_size": cfg.stripe.stripe_size}))
         self._md = open_file(self.path / "md.0", "wb", rank=0)
         self._idx = open_file(self.path / "md.idx", "wb", rank=0)
         self._md_off = 0

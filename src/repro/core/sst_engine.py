@@ -39,13 +39,18 @@ class SstStream:
 
     # ------------------------------------------------------------- producer
     def begin_step(self, step: int):
-        assert self._step is None
+        if self._step is not None:
+            raise RuntimeError(f"begin_step({step}) while step "
+                               f"{self._step} is still open — call "
+                               f"end_step() first")
         self._step = step
         self._pending = {}
 
     def put(self, name: str, array: np.ndarray, *, global_shape=None,
             offset=None, rank: int = 0):
-        assert self._step is not None
+        if self._step is None:
+            raise RuntimeError(
+                "put() outside a step — call begin_step() first")
         a = np.asarray(array)
         var = self._pending.setdefault(name, {
             "dtype": a.dtype, "global_shape": tuple(global_shape or a.shape),

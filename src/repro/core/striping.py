@@ -174,7 +174,10 @@ class StripedFile:
                 for t in threads:
                     t.start()
                 for t in threads:
-                    t.join()
+                    # joining under the lock IS the contract: write()
+                    # returns only after every OST flush landed, and the
+                    # lock orders whole writes (no interleaved stripes)
+                    t.join()   # jbplint: disable=JBP004
                 if errors:
                     raise errors[0]
             self.logical_size = max(self.logical_size, off + len(data))

@@ -23,7 +23,11 @@ class SyntheticTokens:
         self.vocab = vocab_size
         self.seq = seq_len
         self.global_batch = global_batch
-        assert global_batch % n_shards == 0
+        if global_batch % n_shards:
+            raise ValueError(
+                f"global_batch={global_batch} is not divisible by "
+                f"n_shards={n_shards} — every data shard needs an equal "
+                f"local batch")
         self.local_batch = global_batch // n_shards
         self.seed = seed
         self.n_shards = n_shards

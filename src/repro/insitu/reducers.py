@@ -231,7 +231,10 @@ class ReducerSet:
     def __init__(self, reducers: Iterable[Reducer]):
         self.reducers = list(reducers)
         names = [r.name for r in self.reducers]
-        assert len(set(names)) == len(names), f"duplicate reducer names {names}"
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate reducer names {names} — results "
+                             f"are keyed by name, so duplicates would "
+                             f"silently overwrite each other")
 
     @property
     def needed_vars(self) -> Optional[set]:

@@ -62,15 +62,20 @@ def reduce_posthoc(series: Union[str, BpReader], rset: ReducerSet,
 def assert_parity(live: dict, posthoc: dict, path: str = "results"):
     """Exact (bitwise for arrays) equality of two reducer result trees;
     raises AssertionError naming the first diverging leaf."""
+    # explicit raises (not bare asserts): the documented AssertionError
+    # contract must hold under `python -O` too
     if isinstance(live, dict) and isinstance(posthoc, dict):
-        assert live.keys() == posthoc.keys(), \
-            f"{path}: keys {sorted(live)} != {sorted(posthoc)}"
+        if live.keys() != posthoc.keys():
+            raise AssertionError(
+                f"{path}: keys {sorted(live)} != {sorted(posthoc)}")
         for k in live:
             assert_parity(live[k], posthoc[k], f"{path}/{k}")
         return
     if isinstance(live, np.ndarray) or isinstance(posthoc, np.ndarray):
         a, b = np.asarray(live), np.asarray(posthoc)
-        assert a.dtype == b.dtype and a.shape == b.shape and \
-            np.array_equal(a, b, equal_nan=True), f"{path}: arrays differ"
+        if not (a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b, equal_nan=True)):
+            raise AssertionError(f"{path}: arrays differ")
         return
-    assert live == posthoc, f"{path}: {live!r} != {posthoc!r}"
+    if live != posthoc:
+        raise AssertionError(f"{path}: {live!r} != {posthoc!r}")

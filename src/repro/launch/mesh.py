@@ -37,11 +37,15 @@ def make_debug_mesh(*, multi_pod: bool = False, devices=None):
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
     if multi_pod:
-        assert n % 2 == 0 and n >= 8, n
+        if n % 2 or n < 8:
+            raise ValueError(f"multi-pod debug mesh needs an even device "
+                             f"count >= 8, got {n}")
         shape = (2, n // 4, 2)
         axes = ("pod", "data", "model")
     else:
-        assert n % 2 == 0, n
+        if n % 2:
+            raise ValueError(
+                f"debug mesh needs an even device count, got {n}")
         shape = (n // 2, 2)
         axes = ("data", "model")
     return compat_make_mesh(shape, axes)

@@ -135,6 +135,20 @@ def _guard(spec_entries, shape, mesh) -> P:
     return P(*out)
 
 
+def _pad_entries(names, shape, base) -> tuple:
+    """Left-pad a sharding rule's spec entries with None to the array's
+    rank. A base spec LONGER than the rank means the sharding table names
+    more axes than the tensor has — a table bug, not a caller error."""
+    base = tuple(base)
+    pad = len(shape) - len(base)
+    if pad < 0:
+        raise RuntimeError(
+            f"sharding rule for {'/'.join(names)} names {len(base)} axes "
+            f"{base} but the array only has rank {len(shape)} "
+            f"(shape {tuple(shape)}) — fix the param sharding table")
+    return (None,) * pad + base
+
+
 def param_pspec_tree(cfg, mesh, shapes_tree):
     """PartitionSpec pytree matching `shapes_tree` (from model.param_shapes)."""
     tp_size = int(mesh.shape[TP]) if TP in mesh.axis_names else 1
@@ -142,12 +156,9 @@ def param_pspec_tree(cfg, mesh, shapes_tree):
     def rule(path, leaf):
         names = tuple(getattr(k, "key", str(k)) for k in path)
         base = _param_base_spec(names, cfg, tp_size)
-        rank = len(leaf.shape)
         if base is None:
             base = ()
-        pad = rank - len(base)
-        assert pad >= 0, (names, leaf.shape, base)
-        entries = (None,) * pad + tuple(base)
+        entries = _pad_entries(names, leaf.shape, base)
         return _guard(entries, leaf.shape, mesh)
 
     return jax.tree_util.tree_map_with_path(rule, shapes_tree)

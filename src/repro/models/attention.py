@@ -248,8 +248,10 @@ def flash_attention_jnp(q, k, v, *, causal=True, q_chunk=1024, kv_chunk=1024,
     tile-by-tile in the backward pass, exactly like the fused TPU kernel."""
     B, Sq, H, D = q.shape
     Skv = k.shape[1]
-    assert k.shape[2] == H, ("flash core is ungrouped; expand KV heads first",
-                             q.shape, k.shape)
+    if k.shape[2] != H:
+        raise ValueError(
+            f"flash core is ungrouped; expand KV heads first "
+            f"(q {q.shape} has {H} heads, kv {k.shape} has {k.shape[2]})")
     q_chunk = _fit_chunk(Sq, q_chunk)
     kv_chunk = _fit_chunk(Skv, kv_chunk)
     h_ax = hint_axes[0]

@@ -64,7 +64,11 @@ def ssd_chunked(x, dt, A, B, C, D, *, chunk=128, initial_state=None):
     b, s, h, p = x.shape
     n = B.shape[-1]
     chunk = min(chunk, s)
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk:
+        raise ValueError(
+            f"sequence length {s} is not divisible by chunk {chunk} — "
+            f"the chunked SSD scan needs whole chunks (pad the sequence "
+            f"or pick a chunk that divides it)")
     nc = s // chunk
 
     # [nc, b, chunk, ...] so lax.scan walks chunks.

@@ -37,7 +37,11 @@ class ServeEngine:
         Greedy decode `new_tokens` continuations for the whole batch."""
         B, Sp = prompts.shape
         n_new = new_tokens or self.scfg.max_new_tokens
-        assert Sp + n_new <= self.scfg.max_seq
+        if Sp + n_new > self.scfg.max_seq:
+            raise ValueError(
+                f"prompt length {Sp} + new tokens {n_new} exceeds the "
+                f"serve cache budget max_seq={self.scfg.max_seq} — "
+                f"shorten the prompt or raise ServeConfig.max_seq")
 
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if self.cfg.family == "vlm":

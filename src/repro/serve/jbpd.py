@@ -70,7 +70,7 @@ import numpy as np
 
 from repro.core.bp_engine import BpReader
 from repro.core.compression import CorruptPayloadError
-from repro.core.darshan import MONITOR
+from repro.core.darshan import CTR, MONITOR
 from repro.core.dxt import TRACER
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
                                       unlink_rings)
@@ -80,12 +80,12 @@ FRAME = struct.Struct("<II")             # json header bytes, binary body bytes
 
 # the counter families `stats` reports and `watch` streams deltas of — one
 # list, so a watch's begin + Σ(deltas) always reconciles against --stats
-WATCH_COUNTERS = ("SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS",
-                  "SERVICE_COALESCED", "SERVICE_SHM_BYTES",
-                  "SERVICE_SOCKET_BYTES", "TRANSPORT_SHM_BYTES",
-                  "TRANSPORT_PICKLE_FALLBACK_BYTES",
-                  "POSIX_READS", "POSIX_WRITES",
-                  "POSIX_BYTES_READ", "POSIX_BYTES_WRITTEN")
+WATCH_COUNTERS = (CTR.SERVICE_CACHE_HIT, CTR.SERVICE_CACHE_MISS,
+                  CTR.SERVICE_COALESCED, CTR.SERVICE_SHM_BYTES,
+                  CTR.SERVICE_SOCKET_BYTES, CTR.TRANSPORT_SHM_BYTES,
+                  CTR.TRANSPORT_PICKLE_FALLBACK_BYTES,
+                  CTR.POSIX_READS, CTR.POSIX_WRITES,
+                  CTR.POSIX_BYTES_READ, CTR.POSIX_BYTES_WRITTEN)
 
 
 # ---------------------------------------------------------------------- errors
@@ -199,7 +199,7 @@ class ChunkCache:
                 if arr is not None:
                     self._lru.move_to_end(key)
                     self.hits += 1
-                    self.mon.record(0, series, "SERVICE_CACHE_HIT")
+                    self.mon.record(0, series, CTR.SERVICE_CACHE_HIT)
                     return arr
                 fl = self._inflight.get(key)
                 if fl is None:
@@ -208,7 +208,7 @@ class ChunkCache:
                 else:
                     leader = False
                     self.coalesced += 1
-                    self.mon.record(0, series, "SERVICE_COALESCED")
+                    self.mon.record(0, series, CTR.SERVICE_COALESCED)
             if not leader:
                 fl.event.wait()
                 if fl.error is not None:
@@ -230,7 +230,7 @@ class ChunkCache:
                 raise
             with self._lock:
                 self.misses += 1
-                self.mon.record(0, series, "SERVICE_CACHE_MISS")
+                self.mon.record(0, series, CTR.SERVICE_CACHE_MISS)
                 if arr.nbytes <= self.budget:  # oversized: serve, don't cache
                     self._lru[key] = arr
                     self.bytes += arr.nbytes
@@ -574,7 +574,7 @@ class JbpDaemon:
         if ring is not None:
             shdr = ring.write_array(np.ascontiguousarray(arr))
             if shdr is not None:
-                MONITOR.record(0, series, "SERVICE_SHM_BYTES",
+                MONITOR.record(0, series, CTR.SERVICE_SHM_BYTES,
                                float(arr.nbytes))
                 send_msg(conn, {"ok": True,
                                 "shm": {"ring": ring.name,
@@ -583,7 +583,7 @@ class JbpDaemon:
                                         "dtype": shdr.dtype,
                                         "shape": list(shdr.shape)}})
                 return
-        MONITOR.record(0, series, "SERVICE_SOCKET_BYTES", float(arr.nbytes))
+        MONITOR.record(0, series, CTR.SERVICE_SOCKET_BYTES, float(arr.nbytes))
         send_msg(conn, {"ok": True, "array": {"dtype": arr.dtype.str,
                                               "shape": list(arr.shape)}},
                  np.ascontiguousarray(arr).tobytes())
@@ -619,7 +619,11 @@ class SeriesClient:
         self._lock = threading.Lock()          # one request at a time
 
     # ----------------------------------------------------------- transport
-    def _connect(self):
+    def _dial(self, *, shm: bool) -> tuple[socket.socket, bool]:
+        """Open ONE handshaken connection to the daemon and return
+        (socket, shm_granted). Owns nothing on self — `_connect` installs
+        the result as the client's request connection; `watch()` dials its
+        own so a long stream never starves concurrent `_call`s."""
         try:
             if isinstance(self.address, str):
                 s = socket.socket(socket.AF_UNIX)
@@ -633,15 +637,23 @@ class SeriesClient:
                 f"cannot reach jbpd at {self.address!r}: {e} "
                 f"(daemon not running, or restarted on another address)"
             ) from e
-        self._sock = s
-        send_msg(s, {"op": "hello", "shm": self.want_shm})
-        hdr, _ = recv_msg(s)
+        try:
+            send_msg(s, {"op": "hello", "shm": shm})
+            hdr, _ = recv_msg(s)
+        except OSError:
+            s.close()
+            raise DaemonDisconnectedError(
+                f"jbpd at {self.address!r} dropped the connection during "
+                f"handshake")
         if hdr is None:
-            self._drop()
+            s.close()
             raise DaemonDisconnectedError(
                 f"jbpd at {self.address!r} closed the connection during "
                 f"handshake")
-        self._shm_ok = bool(hdr.get("shm"))
+        return s, bool(hdr.get("shm"))
+
+    def _connect(self):
+        self._sock, self._shm_ok = self._dial(shm=self.want_shm)
 
     def _drop(self):
         """Forget the dead connection and every shm attachment made through
@@ -661,8 +673,12 @@ class SeriesClient:
             if self._sock is None:
                 self._connect()
             try:
-                send_msg(self._sock, req)
-                hdr, body = recv_msg(self._sock)
+                # blocking under _lock is this protocol's design: ONE
+                # framed request in flight per connection, and the lock is
+                # exactly that serialization (bounded by the socket
+                # timeout). Streams (watch) dial their own connection.
+                send_msg(self._sock, req)            # jbplint: disable=JBP004
+                hdr, body = recv_msg(self._sock)     # jbplint: disable=JBP004
             except (OSError, DaemonDisconnectedError) as e:
                 self._drop()
                 raise DaemonDisconnectedError(
@@ -723,42 +739,45 @@ class SeriesClient:
         """Stream `count` periodic counter-delta frames from the daemon
         (the `watch` op). Returns {"begin": <abs counters>, "frames":
         [frame, ...], "end": <abs counters>}; `on_frame(frame)` is called
-        live per frame (the CLI prints from it). Blocking — the connection
-        is dedicated to the stream until "done" arrives."""
-        with self._lock:
-            if self._sock is None:
-                self._connect()
+        live per frame (the CLI prints from it). Blocking, but on a
+        DEDICATED connection dialed for the stream — it never takes the
+        client's request lock, so stats()/read() from other threads keep
+        answering while a watch runs (a count*interval stream under
+        `_lock` used to starve every concurrent call — jbplint JBP004)."""
+        sock, _ = self._dial(shm=False)
+        try:
+            send_msg(sock, {"op": "watch",
+                            "interval_s": float(interval_s),
+                            "count": int(count)})
+            frames: list[dict] = []
+            begin = None
+            while True:
+                hdr, _ = recv_msg(sock)
+                if hdr is None:
+                    raise DaemonDisconnectedError(
+                        f"jbpd at {self.address!r} closed the "
+                        f"connection mid-watch")
+                if not hdr.get("ok"):
+                    err = hdr.get("error", {})
+                    raise JbpdRequestError(err.get("kind", "error"),
+                                           err.get("msg", "watch failed"))
+                if "watch" in hdr:
+                    begin = hdr["watch"]["begin"]
+                    continue
+                if hdr.get("done"):
+                    return {"begin": begin, "frames": frames,
+                            "end": hdr.get("counters")}
+                frames.append(hdr["frame"])
+                if on_frame is not None:
+                    on_frame(hdr["frame"])
+        except OSError as e:
+            raise DaemonDisconnectedError(
+                f"jbpd at {self.address!r} went away mid-watch") from e
+        finally:
             try:
-                send_msg(self._sock, {"op": "watch",
-                                      "interval_s": float(interval_s),
-                                      "count": int(count)})
-                frames: list[dict] = []
-                begin = None
-                while True:
-                    hdr, _ = recv_msg(self._sock)
-                    if hdr is None:
-                        raise DaemonDisconnectedError(
-                            f"jbpd at {self.address!r} closed the "
-                            f"connection mid-watch")
-                    if not hdr.get("ok"):
-                        err = hdr.get("error", {})
-                        raise JbpdRequestError(err.get("kind", "error"),
-                                               err.get("msg", "watch failed"))
-                    if "watch" in hdr:
-                        begin = hdr["watch"]["begin"]
-                        continue
-                    if hdr.get("done"):
-                        return {"begin": begin, "frames": frames,
-                                "end": hdr.get("counters")}
-                    frames.append(hdr["frame"])
-                    if on_frame is not None:
-                        on_frame(hdr["frame"])
-            except (OSError, DaemonDisconnectedError) as e:
-                self._drop()
-                if isinstance(e, DaemonDisconnectedError):
-                    raise
-                raise DaemonDisconnectedError(
-                    f"jbpd at {self.address!r} went away mid-watch") from e
+                sock.close()
+            except OSError:
+                pass
 
     def shutdown(self):
         """Admin: ask the daemon to stop (the response races the daemon's

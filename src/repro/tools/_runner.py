@@ -26,7 +26,7 @@ import sys
 from typing import Optional
 
 from repro.core.bp_engine import BpReader
-from repro.core.darshan import MONITOR
+from repro.core.darshan import CTR, MONITOR
 
 EXIT_OK = 0
 EXIT_ISSUES = 1
@@ -73,17 +73,18 @@ def io_report(prog: str):
     tot = rep["total"]
     print(f"# {prog} --io-report (merged, whole read/write plane)",
           file=sys.stderr)
-    for k in ("POSIX_OPENS", "POSIX_READS", "POSIX_BYTES_READ",
-              "POSIX_WRITES", "POSIX_BYTES_WRITTEN", "POSIX_SEEKS",
-              "POSIX_FLUSHES", "POSIX_FSYNCS", "POSIX_CLOSES"):
+    for k in (CTR.POSIX_OPENS, CTR.POSIX_READS, CTR.POSIX_BYTES_READ,
+              CTR.POSIX_WRITES, CTR.POSIX_BYTES_WRITTEN, CTR.POSIX_SEEKS,
+              CTR.POSIX_FLUSHES, CTR.POSIX_FSYNCS, CTR.POSIX_CLOSES):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.0f}", file=sys.stderr)
-    for k in ("F_READ_TIME", "F_WRITE_TIME", "F_META_TIME"):
+    for k in (CTR.F_READ_TIME, CTR.F_WRITE_TIME, CTR.F_META_TIME):
         print(f"{prog}: {k} = {tot.get(k, 0.0):.6f}s", file=sys.stderr)
     # plane-specific counters (transport, served reads) print only when the
     # run exercised them — jbpls/jbpfsck output stays byte-stable
-    for k in ("TRANSPORT_SHM_BYTES", "TRANSPORT_PICKLE_FALLBACK_BYTES",
-              "SERVICE_CACHE_HIT", "SERVICE_CACHE_MISS", "SERVICE_COALESCED",
-              "SERVICE_SHM_BYTES", "SERVICE_SOCKET_BYTES"):
+    for k in (CTR.TRANSPORT_SHM_BYTES, CTR.TRANSPORT_PICKLE_FALLBACK_BYTES,
+              CTR.SERVICE_CACHE_HIT, CTR.SERVICE_CACHE_MISS,
+              CTR.SERVICE_COALESCED, CTR.SERVICE_SHM_BYTES,
+              CTR.SERVICE_SOCKET_BYTES):
         if tot.get(k, 0.0):
             print(f"{prog}: {k} = {tot[k]:.0f}", file=sys.stderr)
 

@@ -34,6 +34,7 @@ import re
 import sys
 from collections import defaultdict
 
+from repro.core.darshan import open_file
 from repro.core.dxt import SPAN_OPS, load_trace, to_chrome, to_dxt_text
 from repro.tools import _runner as R
 
@@ -170,12 +171,13 @@ def main(argv=None) -> int:
     events, dropped = doc["events"], doc.get("dropped", 0)
 
     if args.chrome:
-        with open(args.chrome, "w") as f:
+        with open_file(args.chrome, "w") as f:
             json.dump(to_chrome(events, dropped), f)
         print(f"jbpdxt: wrote Chrome trace -> {args.chrome} "
               f"(open in https://ui.perfetto.dev)", file=sys.stderr)
     if args.dxt:
-        pathlib.Path(args.dxt).write_text(to_dxt_text(events, dropped))
+        with open_file(args.dxt, "w") as f:
+            f.write(to_dxt_text(events, dropped))
         print(f"jbpdxt: wrote DXT text -> {args.dxt}", file=sys.stderr)
 
     summ = summarize(events, dropped)

@@ -59,7 +59,8 @@ def _subfile_size(path: pathlib.Path, agg: int) -> Optional[int]:
     if not osts:
         return None
     if side.exists():
-        cfgd = json.loads(side.read_text())
+        with open_file(side, "r") as f:
+            cfgd = json.loads(f.read())
         cfg = StripeConfig(cfgd["stripe_count"], cfgd["stripe_size"])
     else:
         objs = sorted(path.glob(f"ost*/data.{agg}.obj"))
@@ -73,7 +74,8 @@ def _sealed_shard_prefix(path: pathlib.Path, w: int) -> tuple[list, int]:
     """(sealed (step, record) list, sealed prefix BYTE length) of shard w —
     the same replay `iter_shard_records` does, but tracking the exact byte
     offset the sealed prefix ends at (what a tail truncation needs)."""
-    raw = (path / f"md.{w}.shard").read_bytes()
+    with open_file(path / f"md.{w}.shard", "rb") as f:
+        raw = f.read()
     sealed, off = [], 0
     while off + SHARD_HDR.size <= len(raw):
         step, ln, crc = SHARD_HDR.unpack_from(raw, off)

@@ -37,6 +37,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.bp_engine import BpReader
+from repro.core.darshan import open_file
 from repro.tools import _runner as R
 
 
@@ -62,7 +63,8 @@ def _engine_info(path: pathlib.Path) -> dict:
     if not p.exists():
         return {}
     try:
-        doc = json.loads(p.read_text())
+        with open_file(p, "r") as f:
+            doc = json.loads(f.read())
     except (OSError, ValueError):
         return {}
     return {k: doc[k] for k in ("engine", "aggregators", "codec")

@@ -43,6 +43,7 @@ import time
 from typing import Optional
 
 from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import open_file
 from repro.core.striping import StripeConfig
 from repro.tools import _runner as R
 
@@ -51,7 +52,8 @@ def _source_codec(path: pathlib.Path) -> str:
     """Codec recorded in profiling.json, or 'none' for bare series."""
     p = path / "profiling.json"
     try:
-        return json.loads(p.read_text()).get("codec", "none")
+        with open_file(p, "r") as f:
+            return json.loads(f.read()).get("codec", "none")
     except (OSError, ValueError):
         return "none"
 

@@ -362,3 +362,33 @@ def test_parallel_served_reads_use_reader_pool(series, tmpdir_path):
             for s in truth:
                 assert c.read_var(s, "var/x").tobytes() == \
                     truth[s].tobytes()
+
+
+def test_watch_does_not_starve_concurrent_calls(series, tmpdir_path):
+    """Regression (jbplint JBP004): watch() used to hold the client's
+    request lock for the whole count*interval stream, so a concurrent
+    stats() from another thread stalled until the stream finished. The
+    stream now runs on its own dedicated connection: stats() must answer
+    in a fraction of the stream's duration, while the stream itself still
+    delivers every frame."""
+    path, _ = series
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, path) as c:
+            got = {}
+
+            def stream():
+                got["watch"] = c.watch(interval_s=0.25, count=4)
+
+            t = threading.Thread(target=stream, daemon=True)
+            t.start()
+            time.sleep(0.3)            # stream is mid-flight by now
+            t0 = time.perf_counter()
+            st = c.stats()             # must NOT wait out the ~1s stream
+            latency = time.perf_counter() - t0
+            t.join(10.0)
+            assert not t.is_alive()
+            assert latency < 0.5, f"stats() stalled {latency:.2f}s " \
+                                  f"behind the watch stream"
+            assert "series" in st or st  # a real stats payload came back
+            assert len(got["watch"]["frames"]) == 4
+            assert got["watch"]["begin"] is not None

@@ -1,0 +1,157 @@
+"""Regression tests for the jbplint JBP001 sweep: every runtime check
+that used to be a bare `assert` now raises a real exception — and keeps
+raising under `python -O` / PYTHONOPTIMIZE=1, where bare asserts vanish
+(which is exactly why they were banned; see repro/analysis/checkers.py)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.darshan import CTR, KNOWN_COUNTERS, DarshanMonitor
+from repro.core.sst_engine import SstStream
+from repro.data.pipeline import SyntheticTokens
+from repro.insitu.reducers import Moments, ReducerSet
+from repro.insitu.runner import assert_parity
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.sharding import _pad_entries
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+# ----------------------------------------------------- converted raise sites
+def test_pipeline_rejects_indivisible_shards():
+    with pytest.raises(ValueError, match="not divisible by n_shards"):
+        SyntheticTokens(100, 8, global_batch=10, n_shards=3)
+
+
+def test_sst_stream_step_protocol():
+    s = SstStream()
+    with pytest.raises(RuntimeError, match="outside a step"):
+        s.put("v", np.zeros(2, np.float32))
+    s.begin_step(0)
+    with pytest.raises(RuntimeError, match="still open"):
+        s.begin_step(1)
+
+
+def test_reducer_set_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="duplicate reducer names"):
+        ReducerSet([Moments("var/x", name="m"), Moments("var/y", name="m")])
+
+
+def test_assert_parity_contract():
+    a = {"m": np.arange(4, dtype=np.float32)}
+    assert_parity(a, {"m": np.arange(4, dtype=np.float32)})  # equal: silent
+    with pytest.raises(AssertionError, match="keys"):
+        assert_parity(a, {"other": a["m"]})
+    with pytest.raises(AssertionError):
+        assert_parity(a, {"m": a["m"] + 1})
+
+
+def test_debug_mesh_device_count_validation():
+    with pytest.raises(ValueError, match="even device count"):
+        make_debug_mesh(devices=list(range(3)))
+    with pytest.raises(ValueError, match="even device count >= 8"):
+        make_debug_mesh(multi_pod=True, devices=list(range(6)))
+
+
+def test_register_rejects_unknown_family():
+    from repro.configs.base import register
+    from repro.configs.qwen1p5_0p5b import CONFIG
+    bad = dataclasses.replace(CONFIG, name="tmp-bad-family", family="nope")
+    with pytest.raises(ValueError, match="unknown model family 'nope'"):
+        register(bad)
+
+
+def test_ssd_chunked_rejects_ragged_chunks():
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 1, 6, 2, 4, 3
+    with pytest.raises(ValueError, match="not divisible by chunk"):
+        ssd_chunked(np.zeros((b, s, h, p), np.float32),
+                    np.full((b, s, h), 0.1, np.float32),
+                    np.full(h, -1.0, np.float32),
+                    np.zeros((b, s, n), np.float32),
+                    np.zeros((b, s, n), np.float32),
+                    np.zeros(h, np.float32), chunk=4)
+
+
+def test_flash_rejects_grouped_kv_heads():
+    from repro.models.attention import flash_attention_jnp
+    q = np.zeros((1, 8, 4, 8), np.float32)
+    kv = np.zeros((1, 8, 2, 8), np.float32)
+    with pytest.raises(ValueError, match="expand KV heads first"):
+        flash_attention_jnp(q, kv, kv)
+
+
+def test_serve_engine_rejects_overlong_prompt():
+    from repro.configs.qwen1p5_0p5b import CONFIG
+    from repro.serve.engine import ServeConfig, ServeEngine
+    # params=None: the budget check fires BEFORE any compute touches them
+    eng = ServeEngine(CONFIG, None, ServeConfig(max_seq=8))
+    with pytest.raises(ValueError, match="exceeds the serve cache budget"):
+        eng.generate(np.zeros((1, 6), np.int32), new_tokens=4)
+
+
+def test_pad_entries_flags_overlong_rule():
+    assert _pad_entries(("w",), (2, 4), ("model",)) == (None, "model")
+    with pytest.raises(RuntimeError, match="fix the param sharding table"):
+        _pad_entries(("layer", "w"), (4,), (None, "model"))
+
+
+# ------------------------------------------------------- the frozen registry
+def test_record_rejects_unknown_counter_with_suggestion():
+    mon = DarshanMonitor()
+    with pytest.raises(KeyError, match="did you mean 'POSIX_WRITES'"):
+        mon.record(0, "f", "POSIX_WRITS", 1.0)
+    with pytest.raises(KeyError, match="unknown Darshan counter"):
+        mon.record(0, "f", CTR.POSIX_WRITES, 1.0, "F_WRIT_TIME", 0.1)
+    # the registry itself is frozen — no call site can mint a counter
+    with pytest.raises(AttributeError, match="frozen"):
+        CTR.POSIX_TYPO = "POSIX_TYPO"
+    assert CTR.POSIX_WRITES in KNOWN_COUNTERS
+    assert CTR.DXT_EVENTS not in KNOWN_COUNTERS   # report-only key
+
+
+# ------------------------------------------------------------ the -O contract
+def test_validation_survives_python_optimize():
+    """PYTHONOPTIMIZE=1 strips bare asserts (the subprocess proves it),
+    but every converted site still raises — the point of JBP001."""
+    prog = textwrap.dedent("""\
+        import numpy as np
+        # sanity: bare asserts really ARE stripped in this interpreter
+        try:
+            assert 1 == 2
+        except AssertionError:
+            raise SystemExit("asserts not stripped — test is vacuous")
+
+        from repro.core.darshan import DarshanMonitor
+        from repro.core.sst_engine import SstStream
+        from repro.insitu.runner import assert_parity
+
+        try:
+            SstStream().put("v", np.zeros(2, np.float32))
+            raise SystemExit("SstStream.put: no error under -O")
+        except RuntimeError:
+            pass
+        try:
+            DarshanMonitor().record(0, "f", "POSIX_WRITS", 1.0)
+            raise SystemExit("record: no error under -O")
+        except KeyError:
+            pass
+        try:
+            assert_parity({"m": np.zeros(2)}, {"m": np.ones(2)})
+            raise SystemExit("assert_parity: no error under -O")
+        except AssertionError:
+            pass
+        print("OPTIMIZED-OK")
+        """)
+    env = dict(os.environ, PYTHONOPTIMIZE="1",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OPTIMIZED-OK" in out.stdout
