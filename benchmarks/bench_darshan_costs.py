@@ -1,12 +1,14 @@
 """Paper Fig 5: Darshan avg I/O cost per process (reads / metadata / writes)
 for Original I/O vs openPMD+BP4 — the metadata-collapse result.
 
-Also the home of the DXT tracing-overhead sweep (`run_tracing_overhead`):
-the instrumentation's cost contract is "off = one branch per op, on =
-bounded ring-buffer appends", and the sweep measures both against the same
-BpWriter write path with interleaved min-of-N trials and ASSERTS the
-tracing overhead stays ≤5% — CI runs this, so a regression that makes the
-hot-path hooks expensive fails the build, not just a dashboard."""
+Also the home of the instrumentation-overhead sweep
+(`run_tracing_overhead`): the cost contract is "off = one branch per op,
+on = bounded ring-buffer appends / histogram bumps", and the sweep
+measures the same BpWriter write path with the full observability plane
+(DXT tracing AND metrics histograms + step journal) off vs on,
+interleaved min-of-N trials, and ASSERTS the overhead stays ≤5% — CI
+runs this, so a regression that makes the hot-path hooks expensive fails
+the build, not just a dashboard."""
 from __future__ import annotations
 
 import argparse
@@ -15,6 +17,7 @@ from benchmarks.common import Timer, emit, pic_payload, tmp_io_dir
 from repro.core.bp_engine import BpWriter, EngineConfig
 from repro.core.darshan import MONITOR
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS
 from repro.core.original_io import write_dat, write_dmp
 
 
@@ -72,10 +75,12 @@ def _traced_write_pass(d, n_ranks, bytes_per_rank, steps):
 
 def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
                          trials=5, max_overhead_pct=5.0):
-    """DXT tracing-overhead sweep: the same write path with tracing off vs
-    on, interleaved (off, on, off, on, ...) so drift in the machine hits
-    both arms, min-of-N per arm. Asserts on-vs-off overhead ≤5%."""
+    """Observability-overhead sweep: the same write path with the whole
+    plane (DXT tracing + metrics histograms + step journal) off vs on,
+    interleaved (off, on, off, on, ...) so drift in the machine hits both
+    arms, min-of-N per arm. Asserts on-vs-off overhead ≤5%."""
     was_enabled = TRACER.enabled
+    metrics_was_enabled = METRICS.enabled
     t_off, t_on = float("inf"), float("inf")
     try:
         for _ in range(trials):
@@ -83,8 +88,11 @@ def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
                 MONITOR.reset()
                 TRACER.disable()
                 TRACER.reset()
+                METRICS.disable()
+                METRICS.reset()
                 if mode_on:
                     TRACER.enable()
+                    METRICS.enable()
                 with tmp_io_dir("/dev/shm") as d:
                     dt = _traced_write_pass(d, n_ranks, bytes_per_rank, steps)
                 if mode_on:
@@ -97,6 +105,10 @@ def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
         TRACER.reset()
         if was_enabled:
             TRACER.enable()
+        METRICS.disable()
+        METRICS.reset()
+        if metrics_was_enabled:
+            METRICS.enable()
     overhead_pct = (t_on / t_off - 1.0) * 100.0
     emit("darshan/dxt_off s", t_off * 1e6, f"{t_off:.6f}s min of {trials}")
     emit("darshan/dxt_on s", t_on * 1e6,

@@ -16,6 +16,11 @@ JBP004  blocking calls while holding a `with <lock>:` — one slow socket /
 JBP005  lambdas / nested functions handed to spawn-started workers — the
         spawn start method pickles the target by reference, so these fail
         at `Process.start()`, far from where they were written
+JBP006  `time.time()` used to measure a DURATION on the data planes (a
+        subtraction operand or a deadline comparison) — the wall clock
+        steps under NTP/suspend, so durations must come from
+        `time.perf_counter()`/`time.monotonic()`; wall clock is only for
+        epoch stamps (PR 9 retro-fixed jbpd's uptime)
 
 All rules are lexical/AST-level by design: no type inference, no data
 flow. Heuristic receiver-name matching (lock-ish, queue-ish) is tuned to
@@ -241,5 +246,49 @@ class SpawnSafetyChecker(Checker):
         self.generic_visit(node)
 
 
+class WallClockDurationChecker(Checker):
+    rule = "JBP006"
+    name = "wall-clock-duration"
+    description = ("`time.time()` used for duration measurement on the "
+                   "data planes — the wall clock steps (NTP slew, "
+                   "suspend), so elapsed time computed from it is wrong "
+                   "exactly when the machine is busiest; use "
+                   "time.perf_counter() (or time.monotonic() for "
+                   "deadlines). Bare `time.time()` epoch STAMPS are fine "
+                   "— only subtraction operands and comparisons are "
+                   "flagged.")
+    path_includes = ("core", "serve", "tools")
+    path_excludes = ("tests", "benchmarks")
+
+    @staticmethod
+    def _is_wall_clock(node) -> bool:
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "time"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "time")
+
+    def _flag(self, node, how: str):
+        self.report(node, f"time.time() {how} measures a duration on the "
+                          f"wall clock, which steps under NTP/suspend — "
+                          f"use time.perf_counter() (durations) or "
+                          f"time.monotonic() (deadlines); wall clock is "
+                          f"only valid as an epoch stamp")
+
+    def visit_BinOp(self, node):
+        if isinstance(node.op, ast.Sub):
+            for side in (node.left, node.right):
+                if self._is_wall_clock(side):
+                    self._flag(side, "in a subtraction")
+        self.generic_visit(node)
+
+    def visit_Compare(self, node):
+        for side in [node.left] + list(node.comparators):
+            if self._is_wall_clock(side):
+                self._flag(side, "in a comparison (deadline check)")
+        self.generic_visit(node)
+
+
 ALL_CHECKERS = (BareAssertChecker, RawOpenChecker, CounterLiteralChecker,
-                LockHeldBlockingChecker, SpawnSafetyChecker)
+                LockHeldBlockingChecker, SpawnSafetyChecker,
+                WallClockDurationChecker)

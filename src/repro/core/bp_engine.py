@@ -50,8 +50,9 @@ import numpy as np
 from repro.core import compression as C
 from repro.core.aggregation import (AggregatorConfig, SubfileSet, WriterPool,
                                     aggregator_of)
-from repro.core.darshan import open_file
+from repro.core.darshan import MONITOR, open_file
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS, StepJournal, journal_path
 from repro.core.reader_pool import ReaderPool
 from repro.core.striping import OstPool, StripeConfig, StripedFile
 
@@ -155,6 +156,7 @@ def seal_md_record(md, idx, md_off: int, step: int, blob: bytes,
     returning (md.0 fsynced BEFORE the idx record exists, so a validated
     idx record always points at durable metadata); otherwise bytes reach
     the OS and the fsync is deferred to close. Returns the new md offset."""
+    ts = time.perf_counter()
     with TRACER.span("seal", path=getattr(idx, "path", ""),
                      length=len(blob)):
         md.write(blob)
@@ -169,6 +171,9 @@ def seal_md_record(md, idx, md_off: int, step: int, blob: bytes,
             idx.write(rec)
             md.flush()   # bytes reach the OS; fsync deferred to close
             idx.flush()
+    if METRICS.enabled:
+        METRICS.observe("seal", time.perf_counter() - ts, nbytes=len(blob),
+                        key=getattr(idx, "path", ""))
     return md_off + len(blob)
 
 
@@ -229,6 +234,10 @@ class BpWriter:
         self._pending: dict[str, dict] = {}
         self._attrs: dict[str, Any] = {}
         self._profile: list[dict] = []
+        # metrics journal sidecar (metrics.jsonl next to profiling.json):
+        # one frame per sealed step while the metrics plane is enabled
+        self._journal = (StepJournal(journal_path(self.path))
+                         if METRICS.enabled and cfg.profiling else None)
 
     # ------------------------------------------------------------------ step
     def begin_step(self, step: int):
@@ -315,6 +324,10 @@ class BpWriter:
                                       len(payload), chunk_stats(arr)))
                     sp.length = sum(len(p) for p in payloads)
                 tcomp = time.perf_counter() - tc
+                if METRICS.enabled:
+                    METRICS.observe(
+                        "compress", tcomp, key=f"data.{agg}",
+                        nbytes=sum(len(p) for p in payloads))
                 base = self.subfiles.append(agg, b"".join(payloads))
             except Exception as e:   # noqa: BLE001
                 errors.append(e)
@@ -351,7 +364,20 @@ class BpWriter:
                 "aggregators": self.m}
         prof.update(snap.extra)
         self._profile.append(prof)
+        self._journal_frame(step, prof)
         return prof
+
+    def _journal_frame(self, step: int, prof: dict,
+                       workers: Optional[dict] = None):
+        """Append one metrics.jsonl frame for a sealed step: absolute
+        Darshan totals (the journal stores deltas), this process's
+        per-step histogram delta, and any per-worker shipped shards.
+        Single-threaded by the same contract as `_write_step`."""
+        if self._journal is None:
+            return
+        self._journal.frame(step, prof, MONITOR.report()["total"],
+                            METRICS.snapshot(reset=True)["hists"],
+                            workers=workers)
 
     def _profile_doc(self) -> dict:
         return {"engine": "JBP(BP4)", "aggregators": self.m,
@@ -370,6 +396,12 @@ class BpWriter:
                 f.write(json.dumps(self._profile_doc(), indent=1))
         if TRACER.enabled:
             TRACER.dump(self.path / "dxt.json")
+        if self._journal is not None:
+            # final frame: close-time residuals (fsyncs, profiling.json) —
+            # the journal's cumulative stays identical to the live registry
+            self._journal_frame(-1, {"final": True})
+            self._journal.close()
+            self._journal = None
 
 
 def _box_intersection(coff, cext, sel_off, sel_ext):

@@ -19,6 +19,7 @@ from collections import defaultdict
 from typing import Optional
 
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS
 
 
 class _FrozenCounterRegistry:
@@ -309,6 +310,8 @@ class InstrumentedFile:
                         CTR.F_WRITE_TIME, t1 - t0, nbytes=nb)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "write", off, nb, t0, t1)
+        if METRICS.enabled:
+            METRICS.observe("write", t1 - t0, nbytes=nb, key=self.path)
         return nb
 
     def read(self, n: int = -1):
@@ -322,6 +325,8 @@ class InstrumentedFile:
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "read", off, len(data),
                           t0, t1)
+        if METRICS.enabled:
+            METRICS.observe("read", t1 - t0, nbytes=len(data), key=self.path)
         return data
 
     def seek(self, off: int, whence: int = 0):
@@ -358,6 +363,8 @@ class InstrumentedFile:
                         CTR.F_META_TIME, t1 - t0)
         if TRACER.enabled:
             TRACER.record(self.rank, self.path, "fsync", self._pos, 0, t0, t1)
+        if METRICS.enabled:
+            METRICS.observe("fsync", t1 - t0, key=self.path)
 
     def close(self):
         t0 = time.perf_counter()
@@ -381,19 +388,23 @@ def open_file(path, mode, rank: int = 0,
 
 
 def merge_worker_payload(payload, monitor: DarshanMonitor = MONITOR,
-                         tracer=TRACER):
+                         tracer=TRACER, metrics=METRICS):
     """Merge one worker's "finished"/"closed"/ack payload into this
-    process's monitor (and tracer). Tracing workers ship
-    `{"darshan": <monitor snapshot>, "dxt": <tracer snapshot>}`; workers
-    with tracing off (and pre-DXT peers) ship the bare monitor snapshot."""
+    process's monitor (and tracer/metrics registry). Instrumented workers
+    ship `{"darshan": <monitor snapshot>, "dxt": <tracer snapshot>,
+    "metrics": <registry snapshot>}` (each key optional); workers with
+    tracing off (and pre-DXT peers) ship the bare monitor snapshot."""
     if not isinstance(payload, dict):
         return
-    if "darshan" in payload or "dxt" in payload:
+    if "darshan" in payload or "dxt" in payload or "metrics" in payload:
         snap = payload.get("darshan")
         if snap:
             monitor.merge(snap)
         trace = payload.get("dxt")
         if trace:
             tracer.ingest(trace)
+        hist = payload.get("metrics")
+        if hist:
+            metrics.merge(hist)
     else:
         monitor.merge(payload)

@@ -112,8 +112,9 @@ from repro.core.bp_engine import (ChunkMeta, EngineConfig, StepSnapshot,
                                   build_md_record, chunk_stats,
                                   seal_md_record, take_step_snapshot,
                                   validate_put_rank)
-from repro.core.darshan import merge_worker_payload, open_file
+from repro.core.darshan import MONITOR, merge_worker_payload, open_file
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS, StepJournal, journal_path
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
                                       unlink_rings, validate_transport)
 from repro.core.striping import OstPool
@@ -158,7 +159,8 @@ def _open_worker_files(path: pathlib.Path, w: int, n_writers: int,
 
 
 def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
-                 ring_name: Optional[str] = None, trace: bool = False):
+                 ring_name: Optional[str] = None, trace: bool = False,
+                 metrics: bool = False):
     """One writer process: owns data.<w> + md.<w>.shard while a series is
     open. With `path_str=None` the worker starts IDLE (a `WriterPlane`
     member) and is retargeted per series via "open"/"finish" — the process
@@ -210,13 +212,23 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
     # would steal the coordinator's own events.
     if trace and parent is not None:
         TRACER.enable()
+    # metrics plane: same inheritance story as DXT — the coordinator's flag
+    # rides the spawn args / "open" payload; enabling in thread mode would
+    # alias the parent's registry, so only a real child flips it
+    if metrics and parent is not None:
+        METRICS.enable()
 
     def _ship_payload(reset: bool):
         snap = MONITOR.snapshot()
         if reset:
             MONITOR.reset()
-        if parent is not None and TRACER.enabled:
-            return {"darshan": snap, "dxt": TRACER.snapshot(reset=True)}
+        if parent is not None and (TRACER.enabled or METRICS.enabled):
+            out = {"darshan": snap}
+            if TRACER.enabled:
+                out["dxt"] = TRACER.snapshot(reset=True)
+            if METRICS.enabled:
+                out["metrics"] = METRICS.snapshot(reset=True)
+            return out
         return snap
 
     if parent is not None:
@@ -261,6 +273,8 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
                 o_path, o_n, o_cfg = msg[2][:3]
                 if len(msg[2]) > 3 and msg[2][3] and parent is not None:
                     TRACER.enable()             # coordinator traces this series
+                if len(msg[2]) > 4 and msg[2][4] and parent is not None:
+                    METRICS.enable()            # coordinator meters this series
                 n_writers, cfg = o_n, o_cfg
                 spath = str(o_path)
                 subfiles, shard = _open_worker_files(
@@ -314,6 +328,9 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
                                   chunk_stats(arr)))
                     del arr                     # release any shm view NOW
                 csp.length = sum(len(p) for p in payloads)
+            if METRICS.enabled:
+                METRICS.observe("compress", tcomp, key=f"data.{w}",
+                                nbytes=sum(len(p) for p in payloads))
             if ring is not None:
                 tkey = f"{spath}/transport"
                 if shm_bytes:
@@ -337,6 +354,7 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             # the shard, and a stale counter would desync every later
             # commit ("worker stays alive" requires this)
             rec_off = shard.tell()
+            tseal = time.perf_counter()
             with TRACER.span("seal", path=f"md.{w}.shard", rank=w,
                              length=len(blob)):
                 shard.write(SHARD_HDR.pack(step, len(blob), crc))
@@ -347,6 +365,9 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
                 else:
                     subfiles.flush_one(w)
                     shard.flush()  # coordinator reads the record back NOW
+            if METRICS.enabled:
+                METRICS.observe("seal", time.perf_counter() - tseal,
+                                nbytes=len(blob), key=f"md.{w}.shard")
             info = {"shard_off": rec_off,
                     "shard_len": SHARD_HDR.size + len(blob), "crc": crc,
                     "compress_s": tcomp, "bytes_stored": off - base,
@@ -356,6 +377,10 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
                 # ship this step's trace events home on the ack itself —
                 # the coordinator's timeline stays live, not close-time
                 info["dxt"] = TRACER.snapshot(reset=True)
+            if parent is not None and METRICS.enabled:
+                # per-step histogram shard home on the same ack: the
+                # coordinator's journal frame carries this worker's cells
+                info["metrics"] = METRICS.snapshot(reset=True)
             result_q.put(("prepared", w, step, info))
         except BaseException:                   # noqa: BLE001
             result_q.put(("error", w, step, traceback.format_exc()))
@@ -448,7 +473,7 @@ class WriterPlane:
         self.workers, self.result_q = spawn_io_workers(
             self.m, _worker_main,
             lambda i, tq, rq: (i, None, self.m, None, tq, rq, ring_names[i],
-                               TRACER.enabled))
+                               TRACER.enabled, METRICS.enabled))
         try:       # idle-ready handshake: every process is up and listening
             collect_acks(self.workers, self.result_q, "ready", range(self.m),
                          timeout=self.ack_timeout)
@@ -546,6 +571,10 @@ class ParallelBpWriter:
         self._pending: dict[str, dict] = {}
         self._attrs: dict[str, Any] = {}
         self._profile: list[dict] = []
+        # metrics journal sidecar: one frame per committed step carrying
+        # the coordinator's delta + every worker's shipped shard
+        self._journal = (StepJournal(journal_path(self.path))
+                         if METRICS.enabled and cfg.profiling else None)
         self._closed = False
         self._crash_after_prepare = False       # test hook: torn-commit sim
         self._rings: list[ShmRing] = []
@@ -559,7 +588,7 @@ class ParallelBpWriter:
                 for wid in range(self.m):
                     self._workers[wid][1].put(
                         ("open", None, (str(self.path), self.m, cfg,
-                                        TRACER.enabled)))
+                                        TRACER.enabled, METRICS.enabled)))
             else:
                 if transport == "shm":
                     self._rings = _make_rings(self.m, ring_bytes)
@@ -569,7 +598,8 @@ class ParallelBpWriter:
                 self._workers, self._result_q = spawn_io_workers(
                     self.m, _worker_main,
                     lambda i, tq, rq: (i, str(self.path), self.m, cfg, tq, rq,
-                                       ring_names[i], TRACER.enabled))
+                                       ring_names[i], TRACER.enabled,
+                                       METRICS.enabled))
             self._collect("ready", range(self.m))   # spawn/open failures here
         except BaseException:
             # a failed bring-up must not leak the md handles, the rings, OR
@@ -694,9 +724,12 @@ class ParallelBpWriter:
                 for wid, items in by_w.items():
                     ring = self._rings[wid] if self._rings else None
                     wire_items = []
+                    tw0 = time.perf_counter()
+                    wid_bytes = 0
                     for name, rank, offset, arr in items:
                         hdr = (ring.write_array(arr)
                                if ring is not None else None)
+                        wid_bytes += arr.nbytes
                         if hdr is not None:
                             shm_slots.setdefault(wid, []).append(hdr.offset)
                             shm_bytes += arr.nbytes
@@ -706,6 +739,12 @@ class ParallelBpWriter:
                                 fallback_bytes += arr.nbytes
                             wire_items.append((name, rank, offset, arr))
                     self._workers[wid][1].put(("step", step, wire_items))
+                    if METRICS.enabled:
+                        # per-worker transport latency: the straggler axis
+                        # the autotuner reads (a slow ring = a slow worker)
+                        METRICS.observe("transport",
+                                        time.perf_counter() - tw0,
+                                        nbytes=wid_bytes, key=f"w{wid}")
             with TRACER.span("prepare", path=str(self.path)):
                 acks = self._collect("prepared", by_w, step=step)
         finally:
@@ -718,16 +757,27 @@ class ParallelBpWriter:
             for wid, offs in shm_slots.items():
                 for off in offs:
                     self._rings[wid].free(off)
-        for a in acks.values():                 # workers ship per-step traces
+        worker_mets: dict[int, dict] = {}
+        for wid, a in acks.items():             # workers ship per-step traces
             trace = a.pop("dxt", None)
             if trace:
                 TRACER.ingest(trace)
+            met = a.pop("metrics", None)
+            if met:
+                # fold into the live registry (the jbpd/metrics-op view)
+                # AND keep the per-worker shard for this step's journal
+                # frame — the two views stay additive-identical
+                METRICS.merge(met)
+                worker_mets[wid] = met
         merged: dict[str, list] = {name: [] for name in snap.pending}
         for wid in sorted(acks):
             rec = self._read_shard_record(wid, acks[wid], step)
             for name, chunk_list in rec["chunks"].items():
                 merged[name].extend(chunk_list)
         t_prepare = time.perf_counter() - t0
+        if METRICS.enabled:
+            METRICS.observe("prepare", t_prepare, nbytes=n_bytes_raw,
+                            key=str(self.path))
 
         if self._crash_after_prepare:
             raise RuntimeError("simulated coordinator crash between "
@@ -745,6 +795,9 @@ class ParallelBpWriter:
                 fsync_step=self.cfg.fsync_policy == "step")
 
         dt = time.perf_counter() - t0
+        if METRICS.enabled:
+            METRICS.observe("commit", dt - t_prepare, nbytes=len(blob),
+                            key=str(self.path))
         prof = {"step": step, "write_s": dt, "prepare_s": t_prepare,
                 "commit_s": dt - t_prepare,
                 "compress_s": sum(a["compress_s"] for a in acks.values()),
@@ -759,6 +812,12 @@ class ParallelBpWriter:
                              for wid in sorted(acks)}}
         prof.update(snap.extra)
         self._profile.append(prof)
+        if self._journal is not None:
+            # single-threaded by the commit contract (caller thread, or the
+            # committer thread in async mode) — ordered like md.idx appends
+            self._journal.frame(step, prof, MONITOR.report()["total"],
+                                METRICS.snapshot(reset=True)["hists"],
+                                workers=worker_mets)
         return prof
 
     def drain(self):
@@ -803,28 +862,37 @@ class ParallelBpWriter:
                 self._committer.shutdown()      # drain; never raises early
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
+        fin_mets: dict[int, dict] = {}
+
+        def _absorb(got: dict):
+            # keep each worker's residual metrics shard for the journal's
+            # final frame BEFORE the payload merge folds it into the live
+            # registry — the two views stay additive-identical
+            for wid, payload in got.items():
+                if isinstance(payload, dict):
+                    met = payload.get("metrics")
+                    if met:
+                        fin_mets[wid] = met
+                merge_worker_payload(payload)
+
         if self._plane is not None:
             # release, don't kill: workers fsync+close this series' files
             # and go back to idle — the plane is reusable immediately
             for wid in range(self.m):
                 self._workers[wid][1].put(("finish", None, None))
             try:
-                got = self._collect(
+                _absorb(self._collect(
                     "finished", [i for i in range(self.m)
-                                 if self._workers[i][0].is_alive()])
-                for payload in got.values():
-                    merge_worker_payload(payload)
+                                 if self._workers[i][0].is_alive()]))
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
         else:
             for _, tq in self._workers:
                 tq.put(("close", None, None))
             try:
-                got = self._collect(
+                _absorb(self._collect(
                     "closed", [i for i, (p, _) in enumerate(self._workers)
-                               if p.is_alive()])
-                for payload in got.values():
-                    merge_worker_payload(payload)
+                               if p.is_alive()]))
             except BaseException as e:          # noqa: BLE001
                 errors.append(e)
             # a worker that died mid-step (or is wedged) must not turn
@@ -852,6 +920,16 @@ class ParallelBpWriter:
             # after the worker merges above: the sidecar is the MERGED
             # coordinator+worker timeline on one wall clock
             TRACER.dump(self.path / "dxt.json")
+        if self._journal is not None:
+            # final frame: close-time residuals (md fsyncs, profiling.json,
+            # each worker's post-last-step shard) — sum over journal frames
+            # reproduces the live registry exactly
+            self._journal.frame(-1, {"final": True},
+                                MONITOR.report()["total"],
+                                METRICS.snapshot(reset=True)["hists"],
+                                workers=fin_mets)
+            self._journal.close()
+            self._journal = None
         if self._committer is not None:
             self._committer.check_error()       # background commit failures
         if errors:

@@ -39,6 +39,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS
 
 
 class ReadBatch:
@@ -130,7 +131,8 @@ class ReaderPool:
                     return
             fn, args, batch = task
             try:
-                with TRACER.span("read_task", rank=i):
+                with TRACER.span("read_task", rank=i), \
+                        METRICS.timer("read_task", key=f"w{i}"):
                     fn(*args)
             except BaseException as e:        # noqa: BLE001 — raised at barrier
                 with self._cond:

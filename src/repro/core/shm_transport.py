@@ -49,6 +49,7 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS
 
 MIN_SLOT = 4096                      # one page: below this, pickle wins anyway
 DEFAULT_RING_BYTES = 64 * 1024 ** 2  # per-worker ring; ~2 steps of 8x4MiB ranks
@@ -198,7 +199,7 @@ class ShmRing:
         off = self.alloc(arr.nbytes)
         if off is None:
             return None
-        t0 = TRACER.now() if TRACER.enabled else 0.0
+        t0 = (TRACER.now() if TRACER.enabled or METRICS.enabled else 0.0)
         dst = np.ndarray(arr.shape, dtype=arr.dtype,
                          buffer=self._shm.buf, offset=off)
         np.copyto(dst, arr)
@@ -206,6 +207,9 @@ class ShmRing:
         if TRACER.enabled:
             TRACER.record(0, self.name, "shm_write", off, arr.nbytes,
                           t0, TRACER.now())
+        if METRICS.enabled:
+            METRICS.observe("shm_write", TRACER.now() - t0,
+                            nbytes=arr.nbytes, key=self.name)
         return ShmHeader(off, arr.nbytes, arr.dtype.str, tuple(arr.shape))
 
     def free(self, offset: int):

@@ -72,6 +72,8 @@ from repro.core.bp_engine import BpReader
 from repro.core.compression import CorruptPayloadError
 from repro.core.darshan import CTR, MONITOR
 from repro.core.dxt import TRACER
+from repro.core.metrics import (METRICS, RollingBaseline, summarize_cell,
+                                to_prometheus)
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
                                       unlink_rings)
 
@@ -215,9 +217,14 @@ class ChunkCache:
                     raise fl.error
                 return fl.result
             try:
+                tf = time.perf_counter()
                 with TRACER.span("cache_fetch", path=series) as sp:
                     arr = fetch()
                     sp.length = arr.nbytes
+                if METRICS.enabled:
+                    METRICS.observe("cache_fetch",
+                                    time.perf_counter() - tf,
+                                    nbytes=arr.nbytes, key=series)
                 if arr.flags.writeable:        # cached objects are shared
                     arr = arr.copy()
                 arr.flags.writeable = False
@@ -271,7 +278,10 @@ class SeriesServer:
 
     def __init__(self, series=(), *, cache_bytes: int = DEFAULT_CACHE_BYTES,
                  parallel: int = 0, open_any: bool = False):
-        self.t0 = time.time()
+        # uptime is a DURATION: measured on the monotonic clock (jbplint
+        # JBP006 — wall clock is for epoch stamps only, it can step)
+        self.t0 = time.perf_counter()
+        self.baseline = RollingBaseline()      # straggler EWMA per (op, key)
         self.cache = ChunkCache(cache_bytes)
         self.parallel = int(parallel)
         self.registered = {str(pathlib.Path(str(s)).resolve())
@@ -313,6 +323,8 @@ class SeriesServer:
             return {"pong": True}
         if op == "stats":
             return self.stats()
+        if op == "metrics":
+            return self.metrics()
         r = self.reader(req.get("series"))
         if op == "steps":
             return {"steps": r.valid_steps()}
@@ -347,9 +359,49 @@ class SeriesServer:
             series = sorted(self._readers)
         return {"series": series, "cache": self.cache.stats(),
                 "parallel": self.parallel,
-                "uptime_s": time.time() - self.t0,
+                "uptime_s": time.perf_counter() - self.t0,
                 "dxt": TRACER.stats(),
+                "metrics": METRICS.stats(),
                 "counters": self.counters()}
+
+    # -------------------------------------------------------- metrics plane
+    def stragglers(self) -> list[dict]:
+        """Current straggler/anomaly report over the live histogram cells
+        (peer-median p99 ratio + rolling EWMA baseline). Serialized: the
+        baseline's history is shared mutable state."""
+        cells = METRICS.merged()
+        with self._lock:
+            return self.baseline.update(cells)
+
+    def metrics(self) -> dict:
+        """The `metrics` admin op: every consumer view of the histogram
+        plane in one response — raw cells (additive, journal-compatible),
+        deterministic percentile summaries (identical to what `jbpstat`
+        derives from a journal of the same run), the straggler report,
+        and the Prometheus text exposition the HTTP shim serves."""
+        cells = METRICS.merged()
+        with self._lock:
+            stragglers = self.baseline.update(cells)
+        return {"enabled": METRICS.enabled,
+                "counters": MONITOR.report()["total"],
+                "hists": cells,
+                "percentiles": {ck: summarize_cell(c)
+                                for ck, c in cells.items()},
+                "stragglers": stragglers,
+                "text": self.metrics_text(cells)}
+
+    def metrics_text(self, cells: Optional[dict] = None) -> str:
+        """Prometheus text-format exposition (0.0.4) of counters, service
+        gauges and the latency/size histogram families."""
+        if cells is None:
+            cells = METRICS.merged()
+        cs = self.cache.stats()
+        gauges = {"uptime_seconds": time.perf_counter() - self.t0,
+                  "cache_bytes": cs["bytes"],
+                  "cache_entries": cs["entries"],
+                  "metrics_enabled": 1 if METRICS.enabled else 0}
+        return to_prometheus(cells, counters=MONITOR.report()["total"],
+                             gauges=gauges)
 
     def close(self):
         with self._lock:
@@ -512,8 +564,12 @@ class JbpDaemon:
                         break                  # client went away mid-stream
                     continue
                 try:
+                    tq = time.perf_counter()
                     with TRACER.span("serve", path=str(op), rank=cid):
                         res = self.server.query(hdr)
+                    if METRICS.enabled:
+                        METRICS.observe("serve", time.perf_counter() - tq,
+                                        key=str(op))
                 except BaseException as e:     # noqa: BLE001 — conn survives
                     send_msg(conn, {"ok": False,
                                     "error": {"kind": _error_kind(e),
@@ -542,7 +598,7 @@ class JbpDaemon:
 
             {"ok": true, "watch": {"begin": <abs counters>, ...}}
             {"ok": true, "frame": {"seq", "t", "counters", "delta",
-                                   "cache", "dxt"}}        x count
+                                   "cache", "dxt", "stragglers"}}  x count
             {"ok": true, "done": true, "counters": <abs counters>}
 
         Invariant (the autotuning contract): begin + Σ(frame deltas) ==
@@ -562,7 +618,8 @@ class JbpDaemon:
                 "seq": seq, "t": time.time(), "counters": cur,
                 "delta": {k: cur[k] - prev.get(k, 0.0) for k in cur},
                 "cache": self.server.cache.stats(),
-                "dxt": TRACER.stats()}})
+                "dxt": TRACER.stats(),
+                "stragglers": self.server.stragglers()}})
             prev = cur
         send_msg(conn, {"ok": True, "done": True, "counters": prev})
 
@@ -587,6 +644,57 @@ class JbpDaemon:
         send_msg(conn, {"ok": True, "array": {"dtype": arr.dtype.str,
                                               "shape": list(arr.shape)}},
                  np.ascontiguousarray(arr).tobytes())
+
+
+# ----------------------------------------------------------------- http shim
+class MetricsHttpShim:
+    """Minimal HTTP exposition endpoint for standard scrapers: GET `/` or
+    `/metrics` returns `SeriesServer.metrics_text()` (Prometheus text
+    format 0.0.4). Deliberately NOT a web framework — one handler, one
+    content type, bound to loopback by default; the framed-socket
+    `metrics` op remains the full-fidelity admin surface. `port=0` binds
+    an ephemeral port (tests); `.port` is the bound port either way."""
+
+    def __init__(self, server: SeriesServer, *, host: str = "127.0.0.1",
+                 port: int = 0):
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+        srv = server
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(self):                  # noqa: N802 — stdlib API name
+                if self.path.split("?", 1)[0] not in ("/", "/metrics"):
+                    self.send_error(404, "only /metrics is served")
+                    return
+                body = srv.metrics_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):         # scrapes are periodic noise
+                pass
+
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="jbpd-metrics-http", daemon=True)
+
+    def start(self) -> "MetricsHttpShim":
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *a):
+        self.stop()
 
 
 # ---------------------------------------------------------------------- client
@@ -640,16 +748,28 @@ class SeriesClient:
         try:
             send_msg(s, {"op": "hello", "shm": shm})
             hdr, _ = recv_msg(s)
-        except OSError:
-            s.close()
-            raise DaemonDisconnectedError(
-                f"jbpd at {self.address!r} dropped the connection during "
-                f"handshake")
-        if hdr is None:
-            s.close()
-            raise DaemonDisconnectedError(
-                f"jbpd at {self.address!r} closed the connection during "
-                f"handshake")
+            if hdr is None:
+                raise DaemonDisconnectedError(
+                    f"jbpd at {self.address!r} closed the connection during "
+                    f"handshake")
+        except BaseException as e:
+            # close on EVERY failed handshake. `except OSError` alone used
+            # to leak the freshly dialed socket when the daemon died in a
+            # way that didn't surface as an OSError — e.g. a garbage frame
+            # from a half-dead peer raising JSONDecodeError inside
+            # recv_msg. One socket per watch() retry loop adds up to fd
+            # exhaustion in a long-lived client.
+            try:
+                s.close()
+            except OSError:
+                pass
+            if isinstance(e, DaemonDisconnectedError):
+                raise
+            if isinstance(e, OSError):
+                raise DaemonDisconnectedError(
+                    f"jbpd at {self.address!r} dropped the connection "
+                    f"during handshake") from e
+            raise
         return s, bool(hdr.get("shm"))
 
     def _connect(self):
@@ -732,6 +852,12 @@ class SeriesClient:
 
     def stats(self) -> dict:
         hdr, _ = self._call({"op": "stats"})
+        return hdr["result"]
+
+    def metrics(self) -> dict:
+        """The daemon's histogram plane: cells, percentile summaries,
+        stragglers, Prometheus text (the `metrics` admin op)."""
+        hdr, _ = self._call({"op": "metrics"})
         return hdr["result"]
 
     def watch(self, interval_s: float = 1.0, count: int = 2,

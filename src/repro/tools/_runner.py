@@ -27,6 +27,7 @@ from typing import Optional
 
 from repro.core.bp_engine import BpReader
 from repro.core.darshan import CTR, MONITOR
+from repro.core.metrics import METRICS, straggler_report, summarize_cell
 
 EXIT_OK = 0
 EXIT_ISSUES = 1
@@ -87,6 +88,23 @@ def io_report(prog: str):
               CTR.SERVICE_SOCKET_BYTES):
         if tot.get(k, 0.0):
             print(f"{prog}: {k} = {tot[k]:.0f}", file=sys.stderr)
+    # metrics plane (repro.core.metrics): per-op latency percentiles and
+    # the straggler report — printed only when histograms were recorded,
+    # so tool output with JBP_METRICS unset stays byte-stable
+    cells = METRICS.merged() if METRICS.enabled else {}
+    if cells:
+        for ck in sorted(cells):
+            s = summarize_cell(cells[ck])
+            if not s["count"]:
+                continue
+            print(f"{prog}: metric {ck} n={s['count']} "
+                  f"p50={s['p50_s'] * 1e3:.3f}ms "
+                  f"p99={s['p99_s'] * 1e3:.3f}ms "
+                  f"max={s['max_s'] * 1e3:.3f}ms", file=sys.stderr)
+        for e in straggler_report(cells):
+            print(f"{prog}: STRAGGLER {e['op']}/{e['key']} "
+                  f"p99={e['p99_s'] * 1e3:.3f}ms = "
+                  f"{e['ratio']:.1f}x peer median", file=sys.stderr)
 
 
 def run_tool(main_fn, argv=None) -> int:

@@ -15,11 +15,21 @@ arbitrary valid series. It runs until SIGINT/SIGTERM (or a client's
 counters including the service plane's SERVICE_CACHE_HIT/MISS,
 SERVICE_COALESCED and SERVICE_SHM/SOCKET_BYTES.
 
+With `--metrics-port PORT` the daemon also serves the Prometheus text
+exposition of the metrics plane (`repro.core.metrics`) over plain HTTP —
+`curl :PORT/metrics` — and enables histogram recording for its own
+process (cache_fetch/serve/read latencies) if it was not already on.
+
 Admin mode (against a RUNNING daemon; `SERIES` args are not needed):
 
     python -m repro.tools.jbpd --socket /tmp/jbpd.sock --stats
+    python -m repro.tools.jbpd --socket /tmp/jbpd.sock --metrics
     python -m repro.tools.jbpd --socket /tmp/jbpd.sock --watch 5 --interval 2
     python -m repro.tools.jbpd --socket /tmp/jbpd.sock --shutdown
+
+`--metrics` prints the `metrics` admin op's JSON (histogram cells,
+percentile summaries, straggler report) — the same numbers the HTTP
+exposition serves, over the framed socket protocol.
 
 `--watch N` streams N live counter-DELTA frames from the daemon (the
 `watch` op): each frame prints the non-zero deltas since the previous
@@ -35,9 +45,11 @@ import json
 import signal
 import sys
 
+from repro.core.metrics import METRICS
 from repro.core.shm_transport import DEFAULT_RING_BYTES
 from repro.serve.jbpd import (DEFAULT_CACHE_BYTES, DaemonDisconnectedError,
-                              JbpDaemon, SeriesClient, SeriesServer)
+                              JbpDaemon, MetricsHttpShim, SeriesClient,
+                              SeriesServer)
 from repro.tools import _runner as R
 
 MiB = 1024 ** 2
@@ -68,8 +80,15 @@ def main(argv=None) -> int:
                     help="disable shm handoff (socket framing only)")
     ap.add_argument("--open-any", action="store_true",
                     help="also serve valid series NOT listed at startup")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="also serve the Prometheus text exposition over "
+                         "HTTP on this port (0 = ephemeral; enables "
+                         "histogram recording)")
     ap.add_argument("--stats", action="store_true",
                     help="admin: query a running daemon's stats and exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="admin: print a running daemon's metrics op "
+                         "(histograms, percentiles, stragglers) and exit")
     ap.add_argument("--watch", type=int, default=None, metavar="N",
                     help="admin: stream N live counter-delta frames from "
                          "a running daemon and exit")
@@ -86,20 +105,31 @@ def main(argv=None) -> int:
     address = args.socket if args.socket else (args.host, args.port)
 
     # ------------------------------------------------------------ admin mode
-    if args.stats or args.shutdown or args.watch is not None:
+    if (args.stats or args.metrics or args.shutdown
+            or args.watch is not None):
         try:
             with SeriesClient(address, shm=False) as c:
                 if args.stats:
                     print(json.dumps(c.stats(), indent=1))
+                if args.metrics:
+                    print(json.dumps(c.metrics(), indent=1))
                 if args.watch is not None:
                     def show(frame):
                         deltas = {k: v for k, v in frame["delta"].items()
                                   if v}
                         cache = frame["cache"]
+                        strag = frame.get("stragglers") or []
+                        tail = ""
+                        if strag:
+                            worst = strag[0]
+                            tail = (f" STRAGGLER {worst['op']}/"
+                                    f"{worst['key']} x{worst['ratio']:.1f}"
+                                    + (f" (+{len(strag) - 1} more)"
+                                       if len(strag) > 1 else ""))
                         print(f"jbpd watch #{frame['seq']}: "
                               f"{json.dumps(deltas) if deltas else 'idle'} "
                               f"cache={cache['entries']}e/"
-                              f"{cache['bytes']}B", flush=True)
+                              f"{cache['bytes']}B{tail}", flush=True)
                     res = c.watch(interval_s=args.interval,
                                   count=max(1, args.watch), on_frame=show)
                     print(f"jbpd watch: {len(res['frames'])} frame(s); "
@@ -129,17 +159,26 @@ def main(argv=None) -> int:
     daemon = JbpDaemon(server, socket_path=args.socket,
                        host=args.host, port=args.port,
                        shm=not args.no_shm, ring_bytes=args.ring_mb * MiB)
+    shim = None
+    if args.metrics_port is not None:
+        METRICS.enable()                # a scrape surface implies recording
+        shim = MetricsHttpShim(server, host=args.host,
+                               port=args.metrics_port).start()
     for sig in (signal.SIGINT, signal.SIGTERM):
         signal.signal(sig, lambda *a: daemon.stop())
     served = ", ".join(args.series) if args.series else "<any>"
+    mtxt = (f", metrics http://{shim.host}:{shim.port}/metrics"
+            if shim is not None else "")
     print(f"jbpd: listening on {daemon.address!r} serving {served} "
           f"(cache {args.cache_mb} MiB, parallel={args.parallel}, "
-          f"shm={'off' if args.no_shm else 'on'})", file=sys.stderr,
+          f"shm={'off' if args.no_shm else 'on'}{mtxt})", file=sys.stderr,
           flush=True)
     try:
         daemon.serve_forever()
     finally:
         daemon.stop()
+        if shim is not None:
+            shim.stop()
     if args.io_report:
         R.io_report("jbpd")
     return R.EXIT_OK

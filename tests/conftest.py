@@ -6,6 +6,7 @@ import pytest
 
 from repro.core.darshan import MONITOR
 from repro.core.dxt import TRACER
+from repro.core.metrics import METRICS
 
 
 @pytest.fixture()
@@ -18,9 +19,13 @@ def tmpdir_path():
 @pytest.fixture(autouse=True)
 def fresh_monitor():
     MONITOR.reset()
+    METRICS.reset()
     yield
     # a test that enabled tracing must not leak it into the next test:
-    # TRACER is process-global exactly like MONITOR
+    # TRACER and METRICS are process-global exactly like MONITOR
     if TRACER.enabled:
         TRACER.disable()
         TRACER.reset()
+    if METRICS.enabled:
+        METRICS.disable()
+    METRICS.reset()

@@ -1,0 +1,146 @@
+"""Minimal Prometheus text-exposition (0.0.4) parser / validator.
+
+Used by test_metrics / test_jbpd AND by CI (``python tests/promtext.py
+FILE``) to validate what `MetricsHttpShim` / `SeriesServer.metrics_text`
+serve.  Deliberately dependency-free: the repo may not have
+prometheus_client installed, and the exposition grammar is small enough
+to check exactly:
+
+  * every non-comment line is ``name{labels} value`` or ``name value``
+  * label values are double-quoted with ``\\`` ``\"`` ``\n`` escaped
+  * every sample's metric name was declared by a ``# TYPE`` line
+    (histogram samples may use the ``_bucket``/``_sum``/``_count``
+    suffixes of their family)
+  * histogram ``le`` buckets are cumulative, non-decreasing, and end
+    with ``+Inf`` whose count equals the family's ``_count``
+  * the body ends with a newline (the spec's final-EOL requirement)
+
+``parse(text)`` returns (samples, types) or raises ValueError with a
+line-numbered complaint; ``validate(text)`` additionally runs the
+histogram-shape checks.
+"""
+from __future__ import annotations
+
+import math
+import re
+import sys
+
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LINE = re.compile(rf"^({_NAME})(?:\{{(.*)\}})? (-?(?:[0-9.eE+-]+|Inf|NaN))$")
+_LABEL = re.compile(rf'({_NAME})="((?:[^"\\\n]|\\[\\"n])*)"(?:,|$)')
+_SUFFIXES = ("_bucket", "_sum", "_count", "_total")
+
+
+def _unescape(v: str) -> str:
+    return (v.replace("\\\\", "\x00").replace('\\"', '"')
+             .replace("\\n", "\n").replace("\x00", "\\"))
+
+
+def parse(text: str):
+    """-> (samples, types): samples is a list of (name, labels, value),
+    types maps declared family name -> type string."""
+    if not text.endswith("\n"):
+        raise ValueError("exposition must end with a newline")
+    types: dict[str, str] = {}
+    helps: set[str] = set()
+    samples: list[tuple[str, dict, float]] = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary", "untyped"):
+                raise ValueError(f"line {ln}: malformed TYPE line: {line!r}")
+            if parts[2] in types:
+                raise ValueError(f"line {ln}: duplicate TYPE for {parts[2]}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 3:
+                raise ValueError(f"line {ln}: malformed HELP line: {line!r}")
+            helps.add(parts[2])
+            continue
+        if line.startswith("#"):
+            continue                       # free comment — legal
+        m = _LINE.match(line)
+        if not m:
+            raise ValueError(f"line {ln}: not a valid sample line: {line!r}")
+        name, labelblob, value = m.group(1), m.group(2), m.group(3)
+        labels: dict[str, str] = {}
+        if labelblob:
+            pos = 0
+            while pos < len(labelblob):
+                lm = _LABEL.match(labelblob, pos)
+                if not lm:
+                    raise ValueError(f"line {ln}: bad label syntax at "
+                                     f"{labelblob[pos:]!r}")
+                labels[lm.group(1)] = _unescape(lm.group(2))
+                pos = lm.end()
+        fam = name
+        for suf in _SUFFIXES:
+            if name.endswith(suf) and name[: -len(suf)] in types:
+                fam = name[: -len(suf)]
+                break
+        if fam not in types:
+            raise ValueError(f"line {ln}: sample {name!r} has no TYPE "
+                             f"declaration")
+        samples.append((name, labels, float(value)))
+    return samples, types
+
+
+def validate(text: str):
+    """parse() + histogram-shape checks; returns (samples, types)."""
+    samples, types = parse(text)
+    for fam, typ in types.items():
+        if typ != "histogram":
+            continue
+        # group the family's buckets by their non-le label set
+        series: dict[tuple, list[tuple[float, float]]] = {}
+        counts: dict[tuple, float] = {}
+        for name, labels, value in samples:
+            key = tuple(sorted((k, v) for k, v in labels.items()
+                               if k != "le"))
+            if name == fam + "_bucket":
+                le = labels.get("le")
+                if le is None:
+                    raise ValueError(f"{fam}_bucket without le label")
+                series.setdefault(key, []).append((float(le), value))
+            elif name == fam + "_count":
+                counts[key] = value
+        for key, buckets in series.items():
+            les = [b[0] for b in buckets]
+            vals = [b[1] for b in buckets]
+            if not math.isinf(les[-1]):
+                raise ValueError(f"{fam}{dict(key)}: buckets must end "
+                                 f"with le=+Inf")
+            if sorted(les) != les:
+                raise ValueError(f"{fam}{dict(key)}: le edges not sorted")
+            if any(b > a for a, b in zip(vals[1:], vals[:-1])):
+                raise ValueError(f"{fam}{dict(key)}: bucket counts not "
+                                 f"cumulative")
+            if key in counts and counts[key] != vals[-1]:
+                raise ValueError(f"{fam}{dict(key)}: +Inf bucket "
+                                 f"({vals[-1]}) != _count ({counts[key]})")
+    return samples, types
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print("usage: python tests/promtext.py FILE", file=sys.stderr)
+        return 2
+    with open(argv[1]) as fh:   # validator tool, not a data-plane file
+        text = fh.read()
+    try:
+        samples, types = validate(text)
+    except ValueError as e:
+        print(f"promtext: INVALID: {e}", file=sys.stderr)
+        return 1
+    print(f"promtext: ok — {len(samples)} samples, "
+          f"{len(types)} families ({sum(1 for t in types.values() if t == 'histogram')} histograms)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

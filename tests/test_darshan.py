@@ -143,3 +143,57 @@ def test_parser_dump_dxt_section_counts_ops(tmpdir_path):
     assert "dxt_enabled\t1" in dump
     assert "dxt_op\twrite\t1" in dump
     assert "dxt_op\topen\t1" in dump
+
+
+def test_merge_worker_payload_mixed_legacy_and_current(tmpdir_path):
+    """Satellite of PR 9: one coordinator must absorb — in the SAME merge
+    sequence — a legacy worker's bare monitor snapshot (pre-DXT peers,
+    possibly epoch-less) and a current worker's {"darshan","dxt",
+    "metrics"} payload, with every plane landing additively."""
+    import copy
+
+    from repro.core.darshan import DarshanMonitor, merge_worker_payload
+    from repro.core.dxt import TRACER, DxtTracer
+    from repro.core.metrics import METRICS, MetricsRegistry
+
+    # --- a "legacy" worker: bare snapshot, stripped of its clock epoch
+    legacy_mon = DarshanMonitor()
+    with open_file(tmpdir_path / "legacy.bin", "wb", rank=1,
+                   monitor=legacy_mon) as f:
+        f.write(b"a" * 100)
+    legacy = legacy_mon.snapshot()
+    legacy.pop("epoch", None)            # epoch-less: oldest wire form
+    legacy.pop("bin_s", None)
+
+    # --- a "current" worker: full three-plane payload
+    cur_mon = DarshanMonitor()
+    cur_met = MetricsRegistry()
+    cur_met.enable()
+    TRACER.enable()                      # conftest disables+resets after
+    with open_file(tmpdir_path / "cur.bin", "wb", rank=2,
+                   monitor=cur_mon) as f:
+        f.write(b"b" * 200)
+    cur_met.observe("write", 1e-4, nbytes=200, key="cur.bin")
+    current = {"darshan": cur_mon.snapshot(),
+               "dxt": TRACER.snapshot(reset=True),
+               "metrics": cur_met.snapshot()}
+
+    MONITOR.reset()
+    METRICS.reset()
+    sink_trc = DxtTracer()
+    merge_worker_payload(copy.deepcopy(legacy), MONITOR, sink_trc, METRICS)
+    merge_worker_payload(copy.deepcopy(current), MONITOR, sink_trc, METRICS)
+    merge_worker_payload(None, MONITOR, sink_trc, METRICS)       # tolerated
+    merge_worker_payload({}, MONITOR, sink_trc, METRICS)         # tolerated
+
+    rep = MONITOR.report()
+    assert rep["total"]["POSIX_WRITES"] == 2
+    assert rep["total"]["POSIX_BYTES_WRITTEN"] == 300
+    # per-rank attribution survives the mixed merge
+    assert rep["n_ranks"] == 2
+    per_file = rep["files"]
+    assert per_file[str(tmpdir_path / "legacy.bin")]["POSIX_WRITES"] == 1
+    assert per_file[str(tmpdir_path / "cur.bin")]["POSIX_WRITES"] == 1
+    # the current worker's other planes landed too
+    assert METRICS.merged()["write|cur.bin"]["count"] == 1
+    assert any(ev for ev in sink_trc.events())

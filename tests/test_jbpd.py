@@ -1,18 +1,27 @@
 """jbpd service plane: ChunkCache (LRU/budget/coalescing) unit tests,
 daemon+client end-to-end parity (concurrent clients, overlapping boxes,
 bit-identical to direct reads), cache-hit parity after eviction, shm
-handoff fallback to socket framing, corrupt-payload error mapping, and
-restart/reconnect semantics."""
+handoff fallback to socket framing, corrupt-payload error mapping,
+restart/reconnect semantics, and the metrics plane (the `metrics` admin
+op, the Prometheus HTTP shim, watch-frame stragglers, and the `_dial`
+socket-leak regression)."""
+import os
+import socket
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import numpy as np
+import promtext
 import pytest
 
 from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
 from repro.core.compression import CorruptPayloadError
-from repro.serve.jbpd import (ChunkCache, DaemonDisconnectedError, JbpDaemon,
-                              JbpdRequestError, SeriesClient, SeriesServer)
+from repro.core.metrics import METRICS
+from repro.serve.jbpd import (FRAME, ChunkCache, DaemonDisconnectedError,
+                              JbpDaemon, JbpdRequestError, MetricsHttpShim,
+                              SeriesClient, SeriesServer)
 
 
 def _write(path, *, n_ranks=4, aggregators=2, codec="zlib", steps=2, cols=4):
@@ -392,3 +401,113 @@ def test_watch_does_not_starve_concurrent_calls(series, tmpdir_path):
             assert "series" in st or st  # a real stats payload came back
             assert len(got["watch"]["frames"]) == 4
             assert got["watch"]["begin"] is not None
+
+
+# --------------------------------------------------------------- metrics plane
+def test_metrics_op_matches_live_registry(series, tmpdir_path):
+    """The `metrics` admin op returns the SAME deterministic percentiles
+    the registry computes locally — and the reads the daemon just served
+    show up on the serve-plane cells."""
+    path, truth = series
+    METRICS.enable()
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, path, shm=False) as c:
+            for s in truth:
+                c.read_var(s, "var/x")
+            m = c.metrics()
+    assert m["enabled"]
+    ops = {ck.split("|")[0] for ck in m["hists"]}
+    assert {"cache_fetch", "serve"} <= ops
+    # same process here, so op percentiles == live registry percentiles
+    from repro.core.metrics import summarize_cell
+    live = {ck: summarize_cell(cell) for ck, cell in METRICS.merged().items()}
+    for ck, s in m["percentiles"].items():
+        assert s["count"] == live[ck]["count"], ck
+        assert s["p99_s"] == live[ck]["p99_s"], ck
+    # the op also carries the rendered exposition, and it parses
+    promtext.validate(m["text"])
+    assert isinstance(m["stragglers"], list)
+
+
+def test_metrics_http_shim_serves_valid_exposition(series, tmpdir_path):
+    path, truth = series
+    METRICS.enable()
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, path, shm=False) as c:
+            c.read_var(0, "var/x")
+        with MetricsHttpShim(d.server, port=0) as shim:
+            url = f"http://{shim.host}:{shim.port}/metrics"
+            with urllib.request.urlopen(url) as resp:
+                assert resp.status == 200
+                assert resp.headers["Content-Type"].startswith("text/plain")
+                text = resp.read().decode()
+            samples, types = promtext.validate(text)
+            assert types["jbp_latency_seconds"] == "histogram"
+            assert types["jbp_counter_total"] == "counter"
+            assert "jbp_uptime_seconds" in types
+            names = {n for n, _, _ in samples}
+            assert "jbp_latency_seconds_bucket" in names
+            # anything but / or /metrics is a 404, not a traceback
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(
+                    f"http://{shim.host}:{shim.port}/other")
+            assert ei.value.code == 404
+
+
+def test_watch_frames_carry_stragglers_key(series, tmpdir_path):
+    path, _ = series
+    METRICS.enable()
+    with _daemon(path, tmpdir_path / "d.sock") as d:
+        with SeriesClient(d.address, path, shm=False) as c:
+            res = c.watch(interval_s=0.05, count=2)
+    for frame in res["frames"]:
+        assert isinstance(frame["stragglers"], list)
+
+
+def _fd_count() -> int:
+    return len(os.listdir("/proc/self/fd"))
+
+
+def test_dial_closes_socket_on_non_oserror_handshake_failure(tmpdir_path):
+    """Regression: `_dial` only closed the fresh socket on OSError, so a
+    daemon dying in a way that surfaced as a NON-OSError — e.g. a garbage
+    frame making json.loads blow up inside recv_msg — leaked one fd per
+    attempt (watch() retry loops ground through them). Every failed
+    handshake must now close the socket."""
+    sock_path = str(tmpdir_path / "fake.sock")
+    srv = socket.socket(socket.AF_UNIX)
+    srv.bind(sock_path)
+    srv.listen(32)
+    stop = threading.Event()
+
+    def garbage_daemon():
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except OSError:
+                return
+            with conn:
+                try:
+                    conn.recv(65536)                    # swallow the hello
+                    blob = b"\x00this is not json"      # framed garbage
+                    conn.sendall(FRAME.pack(len(blob), 0) + blob)
+                    conn.recv(1)          # linger until the client closes
+                except OSError:
+                    pass
+
+    t = threading.Thread(target=garbage_daemon, daemon=True)
+    t.start()
+    try:
+        c = SeriesClient(sock_path, shm=False)
+        with pytest.raises((DaemonDisconnectedError, ValueError)):
+            c.ping()                                    # warm-up attempt
+        base = _fd_count()
+        for _ in range(20):
+            with pytest.raises((DaemonDisconnectedError, ValueError)):
+                c.ping()
+        leaked = _fd_count() - base
+        assert leaked <= 1, f"{leaked} fds leaked across 20 failed dials"
+    finally:
+        stop.set()
+        srv.close()
+        t.join(5.0)

@@ -178,6 +178,45 @@ def test_jbp005_module_level_target_clean(tmpdir_path):
     assert analyze_paths([good]).clean
 
 
+# ------------------------------------------------------------------ JBP006
+def test_jbp006_flags_wall_clock_durations(tmpdir_path):
+    bad = _src(tmpdir_path, "core/bad_clock.py", """\
+        import time
+
+        def slow_op(t0, deadline):
+            dt = time.time() - t0
+            if time.time() > deadline:
+                raise TimeoutError(f"{dt:.1f}s")
+            return dt
+        """)
+    res = analyze_paths([bad])
+    assert _rules(res) == ["JBP006"] * 2
+
+
+def test_jbp006_perf_counter_and_epoch_stamps_clean(tmpdir_path):
+    good = _src(tmpdir_path, "core/good_clock.py", """\
+        import time
+
+        def timed_op(run):
+            t_wall = time.time()          # epoch STAMP: legal
+            t0 = time.perf_counter()
+            run()
+            dt = time.perf_counter() - t0
+            return {"t": t_wall, "dt": dt}
+        """)
+    assert analyze_paths([good]).clean
+
+
+def test_jbp006_scoped_to_data_plane_dirs(tmpdir_path):
+    off_plane = _src(tmpdir_path, "analysis/clock.py", """\
+        import time
+
+        def elapsed(t0):
+            return time.time() - t0
+        """)
+    assert analyze_paths([off_plane]).clean
+
+
 # ----------------------------------------------------------- suppressions
 def test_suppression_trailing_and_preceding_comment(tmpdir_path):
     f = _src(tmpdir_path, "core/supp.py", """\

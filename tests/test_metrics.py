@@ -1,0 +1,367 @@
+"""Metrics plane: bucket math, shard/snapshot/merge discipline, journal
+parity, stragglers, Prometheus exposition, and the engine integrations.
+
+The two acceptance contracts from PR 9 live here:
+
+  * PARITY — p50/p95/p99 computed by `jbpstat` over a journal are
+    IDENTICAL to the live registry's (and therefore to the jbpd
+    `metrics` op's) values for the same run, because percentiles are
+    deterministic functions of log2 bucket counts and the per-step
+    journal deltas sum back to the cumulative exactly.
+  * W=2 — a parallel-writer journal carries per-worker histograms whose
+    write-cell counts match the merged Darshan per-file POSIX_WRITES.
+"""
+import json
+import threading
+
+import numpy as np
+import promtext
+import pytest
+
+from repro.core import metrics as M
+from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import MONITOR
+from repro.core.metrics import (METRICS, MetricsRegistry, RollingBaseline,
+                                StepJournal, bucket_index, bucket_le,
+                                load_journal, merge_cells, new_cell,
+                                quantile_from_buckets, straggler_report,
+                                sum_journal_hists, summarize_cell,
+                                to_prometheus)
+from repro.core.parallel_engine import ParallelBpWriter
+
+
+# ------------------------------------------------------------- bucket math
+def test_bucket_index_edges():
+    # bucket 0 is <=1 unit; bucket i covers (2^(i-1), 2^i]
+    assert bucket_index(0, 32) == 0
+    assert bucket_index(1, 32) == 0
+    assert bucket_index(2, 32) == 1
+    assert bucket_index(3, 32) == 2
+    assert bucket_index(4, 32) == 2
+    assert bucket_index(5, 32) == 3
+    for i in range(1, 30):
+        # the upper edge itself lands in bucket i, edge+1 in bucket i+1
+        assert bucket_index(bucket_le(i), 32) == i
+        assert bucket_index(bucket_le(i) + 1, 32) == i + 1
+    # clamp to the top bucket
+    assert bucket_index(1 << 60, 32) == 31
+
+
+def test_quantile_from_buckets():
+    counts = [0] * 32
+    counts[3] = 50       # 50 obs <= 8 units
+    counts[7] = 50       # 50 obs <= 128 units
+    assert quantile_from_buckets(counts, 0.50) == 8
+    assert quantile_from_buckets(counts, 0.51) == 128
+    assert quantile_from_buckets(counts, 0.99) == 128
+    assert quantile_from_buckets([0] * 32, 0.5) is None
+
+
+def test_quantile_is_upper_edge_conservative():
+    # single observation of 5 units -> p50 is its bucket's UPPER edge (8)
+    counts = [0] * 32
+    counts[bucket_index(5, 32)] += 1
+    assert quantile_from_buckets(counts, 0.5) == 8
+
+
+# ---------------------------------------------------------------- registry
+def test_observe_and_summarize():
+    r = MetricsRegistry()
+    r.enable()
+    for us in (3, 5, 100, 2000):
+        r.observe("write", us * 1e-6, nbytes=us * 10, key="f")
+    cells = r.merged()
+    assert set(cells) == {"write|f"}
+    s = summarize_cell(cells["write|f"])
+    assert s["count"] == 4
+    assert s["max_s"] == pytest.approx(2000e-6)
+    assert s["p50_s"] == pytest.approx(8e-6)      # 5us -> (4,8] bucket
+    assert s["p99_s"] == pytest.approx(2048e-6)
+    assert s["mean_s"] == pytest.approx((3 + 5 + 100 + 2000) * 1e-6 / 4)
+
+
+def test_disabled_records_nothing():
+    r = MetricsRegistry()
+    r.disable()
+    r.observe("write", 0.1, nbytes=100)
+    with r.timer("read", key="x"):
+        pass
+    assert r.merged() == {}
+    assert r.stats() == {"enabled": False, "cells": 0, "observations": 0}
+
+
+def test_timer_records_and_nbytes_settable():
+    r = MetricsRegistry()
+    r.enable()
+    with r.timer("compress", key="d0") as t:
+        t.nbytes = 4096
+    cells = r.merged()
+    assert cells["compress|d0"]["count"] == 1
+    assert cells["compress|d0"]["sum_b"] == 4096
+
+
+def test_thread_shards_merge():
+    r = MetricsRegistry()
+    r.enable()
+
+    def work():
+        for _ in range(100):
+            r.observe("read", 1e-5, key="t")
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    r.observe("read", 1e-5, key="t")           # main thread's own shard
+    assert r.merged()["read|t"]["count"] == 401
+
+
+def test_snapshot_reset_retires_delta():
+    """The parity keystone: reset-snapshots ship deltas, merged() never
+    forgets — sum of the shipped deltas == the live cumulative."""
+    r = MetricsRegistry()
+    r.enable()
+    shipped = []
+    for step in range(3):
+        for _ in range(5):
+            r.observe("write", 1e-4, nbytes=512, key="f")
+        shipped.append(r.snapshot(reset=True)["hists"])
+    assert all(h["write|f"]["count"] == 5 for h in shipped)
+    # live cumulative unchanged by the resets
+    assert r.merged()["write|f"]["count"] == 15
+    # the shipped deltas sum back to the same cumulative
+    acc = {}
+    for h in shipped:
+        merge_cells(acc, h)
+    assert acc["write|f"]["count"] == 15
+    assert acc["write|f"]["lat"] == r.merged()["write|f"]["lat"]
+
+
+def test_epoch_rebase_makes_timestamps_wall():
+    import time
+    r = MetricsRegistry()
+    r.enable()
+    before = time.time()
+    r.observe("write", 1e-4)
+    after = time.time()
+    cell = r.snapshot()["hists"]["write|"]
+    assert before - 1.0 <= cell["t0"] <= after + 1.0
+    assert cell["t0"] <= cell["t1"]
+
+
+def test_merge_foreign_snapshot_and_legacy_bare_hists():
+    a = MetricsRegistry()
+    a.enable()
+    a.observe("write", 1e-4, key="f")
+    snap = a.snapshot()
+    b = MetricsRegistry()
+    b.merge(snap)                                  # full snapshot form
+    b.merge(snap["hists"])                         # bare-hists form
+    b.merge(None)                                  # tolerated
+    b.merge({})                                    # tolerated
+    assert b.merged()["write|f"]["count"] == 2
+
+
+def test_merged_is_deterministic_percentile_source():
+    """Same buckets -> same percentiles regardless of which view computes
+    them (live vs round-tripped through JSON, the journal path)."""
+    r = MetricsRegistry()
+    r.enable()
+    rng = np.random.default_rng(7)
+    for us in rng.integers(1, 100000, size=500):
+        r.observe("read", int(us) * 1e-6, key="f")
+    live = {ck: summarize_cell(c) for ck, c in r.merged().items()}
+    wire = json.loads(json.dumps(r.merged()))
+    rt = {ck: summarize_cell(c) for ck, c in wire.items()}
+    assert live == rt
+
+
+# -------------------------------------------------------------- stragglers
+def _cell_with_p99(us: int, n: int = 10) -> dict:
+    c = new_cell()
+    c["count"] = n
+    c["lat"][bucket_index(us, M.NB_LAT)] = n
+    return c
+
+
+def test_straggler_report_flags_slow_peer():
+    cells = {"write|ost0": _cell_with_p99(100),
+             "write|ost1": _cell_with_p99(110),
+             "write|ost2": _cell_with_p99(3000),
+             "read|only_key": _cell_with_p99(99999)}   # <2 peers: exempt
+    rep = straggler_report(cells)
+    assert len(rep) == 1
+    e = rep[0]
+    assert (e["op"], e["key"]) == ("write", "ost2")
+    assert e["ratio"] >= 2.0
+    assert e["p99_s"] == pytest.approx(4096e-6)
+
+
+def test_straggler_report_min_count_gate():
+    cells = {"write|a": _cell_with_p99(100, n=2),
+             "write|b": _cell_with_p99(5000, n=2)}
+    assert straggler_report(cells) == []
+
+
+def test_rolling_baseline_flags_self_regression():
+    rb = RollingBaseline(baseline_ratio=3.0)
+    # two healthy rounds build the EWMA; peers degrade TOGETHER in round 3
+    for _ in range(2):
+        rep = rb.update({"write|a": _cell_with_p99(100),
+                         "write|b": _cell_with_p99(100)})
+        assert rep == []
+    rep = rb.update({"write|a": _cell_with_p99(4000),
+                     "write|b": _cell_with_p99(4000)})
+    # peer-median is blind (both slow); the baseline catches both
+    assert {e["key"] for e in rep} == {"a", "b"}
+    assert all(e.get("vs_baseline") for e in rep)
+
+
+# -------------------------------------------------------------- prometheus
+def test_to_prometheus_valid_exposition():
+    r = MetricsRegistry()
+    r.enable()
+    r.observe("write", 3e-4, nbytes=4096, key='we"ird\\path\n')
+    r.observe("fsync", 2e-3, key="f")
+    text = to_prometheus(r.merged(),
+                         counters={"POSIX_WRITES": 2.0},
+                         gauges={"uptime_seconds": 1.5})
+    samples, types = promtext.validate(text)
+    assert types["jbp_latency_seconds"] == "histogram"
+    assert types["jbp_size_bytes"] == "histogram"
+    assert types["jbp_counter_total"] == "counter"
+    assert types["jbp_uptime_seconds"] == "gauge"
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    # label escaping round-trips through the parser
+    keys = {lb["key"] for lb, _ in by_name["jbp_latency_seconds_count"]}
+    assert 'we"ird\\path\n' in keys
+    # +Inf bucket == count for every series (validate() checked shape)
+    assert all(v in (1.0,) for _, v in by_name["jbp_latency_seconds_count"])
+
+
+def test_to_prometheus_empty_is_valid():
+    samples, types = promtext.validate(to_prometheus({}))
+    assert samples == []
+
+
+# ----------------------------------------------------------------- journal
+def test_step_journal_roundtrip(tmpdir_path):
+    p = tmpdir_path / "metrics.jsonl"
+    j = StepJournal(p)
+    r = MetricsRegistry()
+    r.enable()
+    r.observe("write", 1e-4, key="f")
+    j.frame(0, {"write_s": 0.5}, {"POSIX_WRITES": 3.0},
+            r.snapshot(reset=True)["hists"])
+    r.observe("write", 2e-4, key="f")
+    j.frame(1, {"write_s": 0.6}, {"POSIX_WRITES": 7.0},
+            r.snapshot(reset=True)["hists"],
+            workers={0: {"hists": {"write|w0": _cell_with_p99(100)}}})
+    j.close()
+    frames = load_journal(p)
+    assert [f["step"] for f in frames] == [0, 1]
+    # counters are stored as deltas vs the previous frame
+    assert frames[0]["counters"]["POSIX_WRITES"] == 3.0
+    assert frames[1]["counters"]["POSIX_WRITES"] == 4.0
+    assert "stragglers" in frames[0]
+    cum = sum_journal_hists(frames)
+    assert cum["write|f"]["count"] == 2
+    assert cum["write|w0"]["count"] == 10
+    # load_journal accepts the series DIRECTORY too
+    assert load_journal(tmpdir_path) == frames
+
+
+def test_load_journal_rejects_foreign_jsonl(tmpdir_path):
+    p = tmpdir_path / "metrics.jsonl"
+    p.write_text('{"format": "something-else"}\n')
+    with pytest.raises(ValueError, match="not a jbp metrics journal"):
+        load_journal(p)
+    with pytest.raises(FileNotFoundError):
+        load_journal(tmpdir_path / "nope.jsonl")
+
+
+# ----------------------------------------------- engine integration (serial)
+def _write(path, n_ranks=4, steps=3, writer=BpWriter, **kw):
+    cfg = EngineConfig(aggregators=2, workers=2, codec="blosc")
+    w = writer(path, n_ranks, cfg, **kw)
+    rng = np.random.default_rng(3)
+    for s in range(steps):
+        w.begin_step(s)
+        g = rng.normal(size=(n_ranks * 16, 4)).astype(np.float32)
+        for r in range(n_ranks):
+            w.put("var/x", g[r * 16:(r + 1) * 16], global_shape=g.shape,
+                  offset=(r * 16, 0), rank=r)
+        w.end_step()
+    w.close()
+
+
+def test_serial_writer_journal_parity(tmpdir_path):
+    """Acceptance: Σ(journal frames) == live merged() — and therefore the
+    percentiles jbpstat computes equal the live (jbpd `metrics` op)
+    ones."""
+    METRICS.enable()
+    _write(tmpdir_path / "s.bp4")
+    frames = load_journal(tmpdir_path / "s.bp4")
+    assert frames[-1]["step"] == -1            # close-time residual frame
+    cum = sum_journal_hists(frames)
+    merged = METRICS.merged()
+    assert set(cum) == set(merged)
+    for ck in cum:
+        assert cum[ck]["count"] == merged[ck]["count"], ck
+        assert cum[ck]["lat"] == merged[ck]["lat"], ck
+        assert summarize_cell(cum[ck]) == summarize_cell(merged[ck]), ck
+    # the instrumented ops all showed up
+    ops = {ck.split("|")[0] for ck in cum}
+    assert {"write", "fsync", "compress", "seal"} <= ops
+
+
+def test_journal_absent_when_metrics_disabled(tmpdir_path):
+    _write(tmpdir_path / "s.bp4")
+    assert not (tmpdir_path / "s.bp4" / "metrics.jsonl").exists()
+    # and the write itself recorded nothing
+    assert METRICS.merged() == {}
+
+
+def test_journal_does_not_break_reader(tmpdir_path):
+    METRICS.enable()
+    _write(tmpdir_path / "s.bp4")
+    r = BpReader(tmpdir_path / "s.bp4")
+    assert r.valid_steps() == [0, 1, 2]
+    r.read_var(0, "var/x")
+
+
+# --------------------------------------------- engine integration (parallel)
+def test_parallel_writer_journal_w2_acceptance(tmpdir_path):
+    """The W=2 criterion: the journal carries per-worker histograms whose
+    write-cell bucket sums match the merged Darshan per-file counters."""
+    METRICS.enable()
+    _write(tmpdir_path / "s.bp4", writer=ParallelBpWriter, n_writers=2)
+    frames = load_journal(tmpdir_path / "s.bp4")
+    wids = {wid for f in frames for wid in f.get("workers", {})}
+    assert wids == {"0", "1"}
+    # journal == live parity holds across process boundaries too
+    cum = sum_journal_hists(frames)
+    merged = METRICS.merged()
+    assert set(cum) == set(merged)
+    for ck in cum:
+        assert cum[ck]["count"] == merged[ck]["count"], ck
+        assert cum[ck]["lat"] == merged[ck]["lat"], ck
+    # per-worker write cells vs merged Darshan POSIX_WRITES per file:
+    # every file a worker wrote is attributed identically in both planes
+    per_file = MONITOR.report()["files"]
+    wr_by_file: dict[str, int] = {}
+    for f in frames:
+        for cells in f.get("workers", {}).values():
+            for ck, cell in cells.items():
+                op, _, path = ck.partition("|")
+                if op == "write":
+                    wr_by_file[path] = wr_by_file.get(path, 0) + cell["count"]
+    assert wr_by_file, "workers shipped no write cells"
+    for path, n in wr_by_file.items():
+        assert n == per_file[path]["POSIX_WRITES"], path
+    # per-worker transport + per-aggregator compress keys feed stragglers
+    ops = {ck.split("|")[0] for ck in cum}
+    assert {"transport", "prepare", "commit", "shm_write"} <= ops
