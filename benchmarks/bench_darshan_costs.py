@@ -57,15 +57,21 @@ def run(n_ranks=64, bytes_per_rank=128 * 1024, dumps=3):
              f"{(1 - bp['meta_s'] / max(orig['meta_s'], 1e-12)) * 100:.2f}%")
 
 
-def _traced_write_pass(d, n_ranks, bytes_per_rank, steps):
-    """One full BpWriter write pass; returns wall seconds."""
+def _traced_write_pass(d, n_ranks, bytes_per_rank, steps, *,
+                       device=False, arrays=None):
+    """One full BpWriter write pass; returns wall seconds. `device=True`
+    runs the on-chip compression pipeline (codec=blosc +
+    device_compress, jax.Array chunks in `arrays`) so the sweep also
+    covers the COMPRESS_DEVICE_BYTES/COMPRESS_OVERLAP_TIME recording."""
+    cfg = (EngineConfig(aggregators=2, codec="blosc", device_compress=True)
+           if device else EngineConfig(aggregators=2, codec="none"))
     with Timer() as t:
-        w = BpWriter(d / "s.bp4", n_ranks,
-                     EngineConfig(aggregators=2, codec="none"))
+        w = BpWriter(d / "s.bp4", n_ranks, cfg)
         for s in range(steps):
             w.begin_step(s)
             for r in range(n_ranks):
-                arr = pic_payload(r, bytes_per_rank)["particles"]
+                arr = (arrays[r] if arrays is not None
+                       else pic_payload(r, bytes_per_rank)["particles"])
                 w.put("p/x", arr, global_shape=(arr.size * n_ranks,),
                       offset=(arr.size * r,), rank=r)
             w.end_step()
@@ -74,14 +80,27 @@ def _traced_write_pass(d, n_ranks, bytes_per_rank, steps):
 
 
 def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
-                         trials=5, max_overhead_pct=5.0):
+                         trials=5, max_overhead_pct=5.0, device=False):
     """Observability-overhead sweep: the same write path with the whole
     plane (DXT tracing + metrics histograms + step journal) off vs on,
     interleaved (off, on, off, on, ...) so drift in the machine hits both
-    arms, min-of-N per arm. Asserts on-vs-off overhead ≤5%."""
+    arms, min-of-N per arm. Asserts on-vs-off overhead ≤5%.
+
+    `device=True` measures the device-compress write path instead (on-chip
+    bitshuffle + the new compress counters recording on every chunk) —
+    the observability budget must hold there too."""
     was_enabled = TRACER.enabled
     metrics_was_enabled = METRICS.enabled
     t_off, t_on = float("inf"), float("inf")
+    arrays = None
+    if device:
+        import jax.numpy as jnp
+        # H2D + jit warm-up OUTSIDE the timed region, shared by both arms
+        arrays = [jnp.asarray(pic_payload(r, bytes_per_rank)["particles"])
+                  for r in range(n_ranks)]
+        with tmp_io_dir("/dev/shm") as d:
+            _traced_write_pass(d, n_ranks, bytes_per_rank, 1,
+                               device=True, arrays=arrays)
     try:
         for _ in range(trials):
             for mode_on in (False, True):
@@ -94,7 +113,8 @@ def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
                     TRACER.enable()
                     METRICS.enable()
                 with tmp_io_dir("/dev/shm") as d:
-                    dt = _traced_write_pass(d, n_ranks, bytes_per_rank, steps)
+                    dt = _traced_write_pass(d, n_ranks, bytes_per_rank, steps,
+                                            device=device, arrays=arrays)
                 if mode_on:
                     t_on = min(t_on, dt)
                 else:
@@ -109,11 +129,12 @@ def run_tracing_overhead(n_ranks=16, bytes_per_rank=256 * 1024, steps=3,
         METRICS.reset()
         if metrics_was_enabled:
             METRICS.enable()
+    tag = "dxt_device" if device else "dxt"
     overhead_pct = (t_on / t_off - 1.0) * 100.0
-    emit("darshan/dxt_off s", t_off * 1e6, f"{t_off:.6f}s min of {trials}")
-    emit("darshan/dxt_on s", t_on * 1e6,
+    emit(f"darshan/{tag}_off s", t_off * 1e6, f"{t_off:.6f}s min of {trials}")
+    emit(f"darshan/{tag}_on s", t_on * 1e6,
          f"{t_on:.6f}s min of {trials}, {n_events} events/run")
-    emit("darshan/dxt_overhead_pct", overhead_pct,
+    emit(f"darshan/{tag}_overhead_pct", overhead_pct,
          f"{overhead_pct:+.2f}% (budget {max_overhead_pct:.0f}%)")
     assert overhead_pct <= max_overhead_pct, (
         f"DXT tracing overhead {overhead_pct:+.2f}% exceeds the "
@@ -129,8 +150,12 @@ if __name__ == "__main__":
     ap.add_argument("--ranks", type=int, default=16)
     ap.add_argument("--trials", type=int, default=5)
     ap.add_argument("--max-overhead-pct", type=float, default=5.0)
+    ap.add_argument("--device", action="store_true",
+                    help="measure the device-compress write path (on-chip "
+                         "bitshuffle + compress counters) instead")
     args = ap.parse_args()
     if not args.overhead_only:
         run()
     run_tracing_overhead(n_ranks=args.ranks, trials=args.trials,
-                         max_overhead_pct=args.max_overhead_pct)
+                         max_overhead_pct=args.max_overhead_pct,
+                         device=args.device)

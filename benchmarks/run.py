@@ -41,11 +41,18 @@ def main(argv=None) -> None:
             n_ranks=16 if quick else 256, dumps=3 if quick else 5)),
         ("darshan_dxt_overhead", lambda: bench_darshan_costs.run_tracing_overhead(
             n_ranks=8 if quick else 16, trials=3 if quick else 5)),
+        ("darshan_dxt_overhead_device",
+         lambda: bench_darshan_costs.run_tracing_overhead(
+            n_ranks=8 if quick else 16, trials=3 if quick else 5,
+            device=True)),
         ("aggregators", lambda: bench_aggregators.run(
             n_ranks=32 if quick else 128,
             agg_counts=(1, 4, 16, 32) if quick else (1, 2, 4, 8, 16, 32, 64, 128))),
         ("compression", lambda: bench_compression.run(
             n_ranks=16 if quick else 64)),
+        ("compression_device", lambda: bench_compression.run_device_sweep(
+            sizes_mib=(1, 4) if quick else (1, 4, 16),
+            codecs=("blosc",) if quick else ("blosc", "lossy:1e-5"))),
         ("striping", lambda: bench_striping.run(
             n_ranks=16 if quick else 64,
             counts=(1, 4) if quick else (1, 2, 4, 8))),

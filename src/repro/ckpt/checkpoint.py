@@ -22,7 +22,9 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core import compression as C
 from repro.core.bp_engine import BpReader, BpWriter, EngineConfig
+from repro.core.darshan import CTR, MONITOR
 
 SEP = "/"
 
@@ -69,7 +71,8 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
                     async_io: bool = False,
                     parallel_io: int = 0,
                     writer_plane=None,
-                    transport: str = "shm") -> pathlib.Path:
+                    transport: str = "shm",
+                    device_compress: bool = False) -> pathlib.Path:
     """Atomic checkpoint write: <dir>/step_<N>.bp4 (.tmp + rename).
 
     With `async_io` the write goes through the AsyncBpWriter pipeline;
@@ -84,7 +87,13 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
     writer processes for the parallel path — the spawn cost is the plane
     owner's, paid once per run instead of once per save, and the plane's
     rings stay mapped across saves (the plane inherits its own transport;
-    `transport` applies to the spawn-per-save path)."""
+    `transport` applies to the spawn-per-save path).
+
+    `device_compress=True` byte-shuffles sharded device leaves ON-CHIP
+    (repro.core.compression.device_precondition) before the writer hand-
+    off — with parallel_io the workers receive pre-shuffled bytes over
+    the shm rings and pay only the LZ stage. Unsharded/host leaves and
+    bfloat16 (raw uint16 storage) keep the host path."""
     directory = pathlib.Path(str(directory))
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}.bp4"
@@ -94,7 +103,10 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
 
     flat = flatten_state(state)
     import dataclasses as _dc
-    cfg = _dc.replace(engine_config, fsync_policy="step")
+    cfg = _dc.replace(engine_config, fsync_policy="step",
+                      device_compress=(device_compress
+                                       or engine_config.device_compress))
+    use_dev = cfg.device_compress and C.codec_wants_device(cfg.codec)
     if parallel_io or writer_plane is not None:
         from repro.core.parallel_engine import ParallelBpWriter
         w = ParallelBpWriter(tmp, n_io_ranks, cfg,
@@ -112,12 +124,32 @@ def save_checkpoint(directory, state, step: int, *, n_io_ranks: int = 8,
         for k, v in (extra_attrs or {}).items():
             w.set_attribute(k, v)
         for name, leaf in flat.items():
+            dev_ok = (use_dev and "bfloat16" not in str(leaf.dtype)
+                      and getattr(leaf, "ndim", 0) > 0)
             if hasattr(leaf, "addressable_shards") and len(leaf.addressable_shards) > 1:
                 gshape = tuple(leaf.shape)
                 for sh in leaf.addressable_shards:
                     off = tuple(sl.start or 0 for sl in sh.index) if sh.index else ()
-                    w.put(f"state/{name}", _to_storage(np.asarray(sh.data)),
-                          global_shape=gshape, offset=off, rank=sh.device.id)
+                    if dev_ok:
+                        # on-chip bitshuffle per shard BEFORE the writer
+                        # handoff: downstream (threads or shm workers)
+                        # only runs the LZ stage on pre-shuffled bytes
+                        chunk = C.device_precondition(
+                            sh.data, block=cfg.compression_block)
+                        MONITOR.record(0, str(tmp),
+                                       CTR.COMPRESS_DEVICE_BYTES,
+                                       inc=float(chunk.device_bytes))
+                        w.put(f"state/{name}", chunk, global_shape=gshape,
+                              offset=off, rank=sh.device.id)
+                    else:
+                        w.put(f"state/{name}", _to_storage(np.asarray(sh.data)),
+                              global_shape=gshape, offset=off,
+                              rank=sh.device.id)
+            elif dev_ok and C.is_device_array(leaf):
+                # single-shard device leaf: keep it on-device — the engine
+                # preconditions it itself (cfg.device_compress is set)
+                w.put(f"state/{name}", leaf, global_shape=tuple(leaf.shape),
+                      offset=(0,) * leaf.ndim, rank=0)
             else:
                 host = _to_storage(np.asarray(jax.device_get(leaf)))
                 gshape = host.shape if host.ndim else (1,)

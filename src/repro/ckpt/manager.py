@@ -34,7 +34,8 @@ class CheckpointManager:
                  n_io_ranks: int = 8,
                  engine_config: EngineConfig = EngineConfig(),
                  async_write: bool = True, engine_async: bool = False,
-                 parallel_io: int = 0, transport: str = "shm"):
+                 parallel_io: int = 0, transport: str = "shm",
+                 device_compress: bool = False):
         # async_write is what hides checkpoint I/O behind the next train
         # step (the writer thread). engine_async additionally routes the
         # write through AsyncBpWriter — correctness-neutral (checkpoints
@@ -51,6 +52,10 @@ class CheckpointManager:
         # ships leaf chunks by memcpy + header instead of pickling the
         # whole state down worker queues. `close()` tears the plane down
         # and unlinks the rings (a finalizer covers abnormal exits).
+        # device_compress=True keeps device leaves ON-CHIP at save():
+        # jax.Arrays are immutable, so the snapshot needs no host copy,
+        # and save_checkpoint byte-shuffles each shard on the accelerator
+        # before the writer handoff (workers then skip the shuffle).
         self.dir = pathlib.Path(str(directory))
         self.dir.mkdir(parents=True, exist_ok=True)
         self.every = every
@@ -61,6 +66,7 @@ class CheckpointManager:
         self.engine_async = engine_async
         self.parallel_io = int(parallel_io)
         self.transport = transport
+        self.device_compress = bool(device_compress)
         self._plane = None                       # lazy persistent write plane
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -108,8 +114,17 @@ class CheckpointManager:
         if not force and not self.should_save(step):
             return False
         self.wait()                                  # one write in flight max
-        host_state = jax.tree_util.tree_map(
-            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def snap(x):
+            # with device_compress a jax.Array stays on-chip: it is
+            # immutable, so the producer can keep training on it while
+            # the writer shuffles/compresses this very buffer
+            from repro.core import compression as C
+            if self.device_compress and C.is_device_array(x):
+                return x
+            return np.asarray(jax.device_get(x))
+
+        host_state = jax.tree_util.tree_map(snap, state)
 
         def job():
             try:
@@ -120,7 +135,8 @@ class CheckpointManager:
                                    async_io=(self.engine_async
                                              and not self.parallel_io),
                                    parallel_io=self.parallel_io,
-                                   writer_plane=self._writer_plane())
+                                   writer_plane=self._writer_plane(),
+                                   device_compress=self.device_compress)
                 self.stats["write_s"] += time.perf_counter() - t0
                 self.saved_steps.append(step)
                 # durability barrier passed (sealed md.idx + rename above):

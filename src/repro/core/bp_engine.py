@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import pathlib
 import struct
 import threading
@@ -50,7 +51,7 @@ import numpy as np
 from repro.core import compression as C
 from repro.core.aggregation import (AggregatorConfig, SubfileSet, WriterPool,
                                     aggregator_of)
-from repro.core.darshan import MONITOR, open_file
+from repro.core.darshan import CTR, MONITOR, open_file
 from repro.core.dxt import TRACER
 from repro.core.metrics import METRICS, StepJournal, journal_path
 from repro.core.reader_pool import ReaderPool
@@ -63,8 +64,13 @@ IDX_SIZE = IDX_RECORD.size
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     aggregators: int = 1
-    codec: str = "none"                    # none | blosc | bzip2 | zlib
+    # none | blosc | bzip2 | zlib | lossy:<abs> | lossy:rel:<rel>
+    codec: str = "none"
     compression_block: int = C.DEFAULT_BLOCK
+    # run the blosc byte-shuffle preconditioner ON-DEVICE for jax.Array
+    # puts (kernels/bitshuffle Pallas kernel + async D2H overlapping the
+    # host Z_RLE stage); host/numpy puts are unaffected
+    device_compress: bool = False
     stripe: Optional[StripeConfig] = None
     n_osts: int = 4
     workers: int = 4
@@ -119,6 +125,56 @@ def chunk_stats(arr: np.ndarray) -> tuple[Optional[float], Optional[float]]:
             return None, None
         return float(finite.min()), float(finite.max())
     return lo, hi
+
+
+def finite_stats(vmin: float, vmax: float, kind: str,
+                 size: int) -> tuple[Optional[float], Optional[float]]:
+    """The `chunk_stats` contract applied to bounds computed ELSEWHERE
+    (device-side reductions, PreshuffledChunk metadata): record only
+    finite bounds of ordered dtypes, else (None, None)."""
+    if size == 0 or kind not in "iufb":
+        return None, None
+    if not (math.isfinite(vmin) and math.isfinite(vmax)):
+        return None, None
+    return float(vmin), float(vmax)
+
+
+def encode_chunk(arr, codec: str, block: int, *, device_compress: bool = False):
+    """Compress ONE chunk whatever its form — numpy ndarray (host path),
+    jax.Array (on-device shuffle + D2H overlapping the host LZ stage when
+    `device_compress`, else materialized to host first), or a
+    `PreshuffledChunk` from an upstream preconditioner (host finishes the
+    encode, shuffle skipped). Returns
+    (payload, extent_shape, (vmin, vmax), DeviceStats | None) — the ONE
+    chunk encode shared by the thread-pool engine's agg jobs and the
+    multi-process engine's workers, so payload bytes cannot drift."""
+    if isinstance(arr, C.PreshuffledChunk):
+        return (C.array_payload_preshuffled(arr, codec), arr.shape,
+                finite_stats(arr.vmin, arr.vmax, arr.dtype.kind, arr.size),
+                None)
+    if C.is_device_array(arr):
+        if device_compress:
+            payload, ds = C.device_array_payload(arr, codec, block=block)
+            kind = np.dtype(arr.dtype).kind
+            return (payload, tuple(arr.shape),
+                    finite_stats(ds.vmin, ds.vmax, kind, int(arr.size)), ds)
+        arr = np.asarray(arr)
+    payload = C.array_payload(arr, codec, block=block)
+    return payload, arr.shape, chunk_stats(arr), None
+
+
+def record_compress_counters(rank: int, path: str, codec: str,
+                             raw_nbytes: int, payload_len: int, dstats):
+    """Fold one encoded chunk's device/lossy accounting into the Darshan
+    monitor: on-chip shuffled bytes + overlapped host-LZ seconds (device
+    path) and raw-minus-stored bytes for lossy-coded payloads."""
+    if dstats is not None and dstats.device_bytes:
+        MONITOR.record(rank, path, CTR.COMPRESS_DEVICE_BYTES,
+                       inc=float(dstats.device_bytes),
+                       tkey=CTR.COMPRESS_OVERLAP_TIME, dt=dstats.overlap_s)
+    if C.parse_codec(codec)[0] == "lossy" and payload_len < raw_nbytes:
+        MONITOR.record(rank, path, CTR.LOSSY_BYTES_SAVED,
+                       inc=float(raw_nbytes - payload_len))
 
 
 def validate_put_rank(rank: int, n_ranks: int):
@@ -197,10 +253,18 @@ def take_step_snapshot(step: Optional[int], pending: dict, attrs: dict, *,
     `copy=True` deep-copy semantics cannot drift between engines)."""
     if step is None:
         raise RuntimeError("end_step() outside begin_step()")
+
+    def _copy_chunk(arr):
+        # only host ndarrays need the deep copy — jax.Arrays are immutable
+        # and PreshuffledChunks are minted fresh by the preconditioner, so
+        # the producer cannot mutate either after end_step returns
+        return np.array(arr) if isinstance(arr, np.ndarray) else arr
+
     with TRACER.span("snapshot", path=f"step.{step}") as sp:
         if copy:
-            pending = {name: {"dtype": var["dtype"], "shape": var["shape"],
-                              "chunks": [(r, off, np.array(arr))
+            pending = {name: {**{k: v for k, v in var.items()
+                                 if k != "chunks"},
+                              "chunks": [(r, off, _copy_chunk(arr))
                                          for r, off, arr in var["chunks"]]}
                        for name, var in pending.items()}
         sp.length = sum(arr.nbytes for var in pending.values()
@@ -258,20 +322,37 @@ class BpWriter:
         — what the source step recorded, nothing more."""
         self._attrs = dict(attrs)
 
-    def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
-            offset: tuple, rank: int):
-        """Register one rank's chunk of variable `name` for this step."""
+    def put(self, name: str, array, *, global_shape: tuple,
+            offset: tuple, rank: int, codec: Optional[str] = None):
+        """Register one rank's chunk of variable `name` for this step.
+
+        `array` may be a numpy ndarray, a jax.Array (left on-device until
+        end_step — the device-compress path shuffles it on-chip), or a
+        `PreshuffledChunk` from an upstream preconditioner. `codec`
+        overrides the engine codec for THIS variable (e.g. "lossy:1e-3"
+        for particle data while fields stay lossless)."""
         if self._step is None:
             raise RuntimeError("put() outside begin/end_step")
         validate_put_rank(rank, self.n_ranks)
-        a = np.ascontiguousarray(array)
+        if isinstance(array, C.PreshuffledChunk) or C.is_device_array(array):
+            a = array                      # no host materialization here
+        else:
+            a = np.ascontiguousarray(array)
         gshape = tuple(int(x) for x in global_shape)
         var = self._pending.setdefault(name, {
-            "dtype": a.dtype.str, "shape": gshape, "chunks": []})
+            "dtype": np.dtype(a.dtype).str, "shape": gshape, "chunks": []})
         if var["shape"] != gshape:
             raise ValueError(
                 f"put({name!r}) global_shape {gshape} conflicts with "
                 f"{var['shape']} from an earlier put of this step")
+        if codec is not None:
+            C.parse_codec(codec)           # fail fast on bad specs
+            prev = var.get("codec")
+            if prev is not None and prev != codec:
+                raise ValueError(
+                    f"put({name!r}) codec {codec!r} conflicts with {prev!r} "
+                    f"from an earlier put of this step")
+            var["codec"] = codec
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
 
     def _take_snapshot(self, *, copy: bool) -> StepSnapshot:
@@ -304,24 +385,30 @@ class BpWriter:
         by_agg: dict[int, list] = {}
         n_bytes_raw = 0
         for name, var in snap.pending.items():
+            codec = var.get("codec") or self.cfg.codec
             for rank, offset, arr in var["chunks"]:
                 n_bytes_raw += arr.nbytes
                 agg = aggregator_of(rank, self.n_ranks, self.m)
-                by_agg.setdefault(agg, []).append((name, rank, offset, arr))
+                by_agg.setdefault(agg, []).append(
+                    (name, rank, offset, arr, codec))
 
         def agg_job(agg, items):
             try:
                 tc = time.perf_counter()
+                dpath = str(self.path / f"data.{agg}")
                 payloads, metas = [], []
                 with TRACER.span("compress", path=f"data.{agg}",
                                  rank=agg) as sp:
-                    for name, rank, offset, arr in items:
-                        payload = C.array_payload(
-                            arr, self.cfg.codec,
-                            block=self.cfg.compression_block)
+                    for name, rank, offset, arr, codec in items:
+                        payload, shape, stats, dstats = encode_chunk(
+                            arr, codec, self.cfg.compression_block,
+                            device_compress=self.cfg.device_compress)
+                        record_compress_counters(
+                            agg, dpath, codec, arr.nbytes, len(payload),
+                            dstats)
                         payloads.append(payload)
-                        metas.append((name, rank, offset, arr.shape,
-                                      len(payload), chunk_stats(arr)))
+                        metas.append((name, rank, offset, shape,
+                                      len(payload), stats))
                     sp.length = sum(len(p) for p in payloads)
                 tcomp = time.perf_counter() - tc
                 if METRICS.enabled:

@@ -57,6 +57,14 @@ class _FrozenCounterRegistry:
     SERVICE_COALESCED = "SERVICE_COALESCED"
     SERVICE_SHM_BYTES = "SERVICE_SHM_BYTES"
     SERVICE_SOCKET_BYTES = "SERVICE_SOCKET_BYTES"
+    # device-side compression plane (repro.core.compression device path):
+    # bytes byte-shuffled on-accelerator before the host LZ stage, host-LZ
+    # seconds that ran while a later block was still in the device/D2H
+    # stage (the double-buffered overlap win), and raw-minus-stored bytes
+    # for payloads encoded by the error-bounded lossy codec
+    COMPRESS_DEVICE_BYTES = "COMPRESS_DEVICE_BYTES"
+    COMPRESS_OVERLAP_TIME = "COMPRESS_OVERLAP_TIME"
+    LOSSY_BYTES_SAVED = "LOSSY_BYTES_SAVED"
     # DXT trace summary fields (parser_dump / jbpd watch frames). These are
     # REPORT keys, never recorded directly, so they are excluded from
     # KNOWN_COUNTERS below.
@@ -97,6 +105,8 @@ _TRANSPORT_KEYS = (CTR.TRANSPORT_SHM_BYTES,
 _SERVICE_KEYS = (CTR.SERVICE_CACHE_HIT, CTR.SERVICE_CACHE_MISS,
                  CTR.SERVICE_COALESCED, CTR.SERVICE_SHM_BYTES,
                  CTR.SERVICE_SOCKET_BYTES)
+_COMPRESS_KEYS = (CTR.COMPRESS_DEVICE_BYTES, CTR.COMPRESS_OVERLAP_TIME,
+                  CTR.LOSSY_BYTES_SAVED)
 
 _SIZE_BINS = (100, 1024, 10 * 1024, 100 * 1024, 1024**2, 4 * 1024**2,
               10 * 1024**2, 100 * 1024**2)
@@ -214,7 +224,8 @@ class DarshanMonitor:
             n = max(n_procs if n_procs else len(ranks), 1)
             per_proc = {k: agg.get(k, 0.0) / n
                         for k in (_COUNTER_KEYS + _TIME_KEYS +
-                                  _TRANSPORT_KEYS + _SERVICE_KEYS)}
+                                  _TRANSPORT_KEYS + _SERVICE_KEYS +
+                                  _COMPRESS_KEYS)}
             return {
                 "n_ranks": len(ranks),
                 "total": dict(agg),
@@ -245,7 +256,8 @@ class DarshanMonitor:
         lines = ["# darshan-style report (repro/core/darshan.py)",
                  f"# nprocs: {n_procs or rep['n_ranks']}", "#"]
         lines.append("# <counter> <value> — job totals")
-        for k in _COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS + _SERVICE_KEYS:
+        for k in (_COUNTER_KEYS + _TIME_KEYS + _TRANSPORT_KEYS
+                  + _SERVICE_KEYS + _COMPRESS_KEYS):
             lines.append(f"total_{k}\t{rep['total'].get(k, 0.0):.6f}")
         lines.append("#")
         lines.append("# per-file records")

@@ -58,7 +58,8 @@ DEFAULT_CAPACITY = int(os.environ.get("JBP_DXT_CAPACITY", 1 << 15))
 # recorded by InstrumentedFile): keep these stable — jbpdxt and the
 # Chrome export group by them
 SPAN_OPS = ("snapshot", "compress", "transport", "prepare", "seal",
-            "commit", "pipeline", "cache_fetch", "serve", "read_task")
+            "commit", "pipeline", "cache_fetch", "serve", "read_task",
+            "device_shuffle")
 POSIX_OPS = ("open", "read", "write", "seek", "flush", "fsync", "close")
 
 

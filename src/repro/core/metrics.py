@@ -70,7 +70,7 @@ LAT_UNIT_S = 1e-6                       # one latency bucket unit, in seconds
 #: free-form ops are accepted — this tuple is documentation + test surface
 KNOWN_OPS = ("read", "write", "fsync", "compress", "seal", "transport",
              "prepare", "commit", "shm_write", "cache_fetch", "serve",
-             "read_task")
+             "read_task", "device_shuffle")
 
 
 def bucket_index(x: int, nb: int) -> int:

@@ -47,6 +47,7 @@ plane's pipelined commit, and asking for both planes at once
 """
 from __future__ import annotations
 
+import dataclasses
 import pathlib
 from typing import Any, Optional
 
@@ -68,16 +69,29 @@ class RecordComponent:
         self._global_extent: Optional[tuple] = None
         self._chunks: list[tuple[np.ndarray, tuple, int]] = []
         self.attributes: dict[str, Any] = {"unitSI": 1.0}
+        self.codec: Optional[str] = None   # per-variable engine-codec override
 
     def reset_dataset(self, dtype, global_extent: tuple):
         self._dtype = np.dtype(dtype)
         self._global_extent = tuple(int(x) for x in global_extent)
         return self
 
+    def set_codec(self, spec: Optional[str]):
+        """Override the engine codec for THIS component, e.g. "lossy:1e-4"
+        for particle data while fields stay lossless. Validated now."""
+        if spec is not None:
+            from repro.core import compression as _C
+            _C.parse_codec(spec)
+        self.codec = spec
+        return self
+
     def store_chunk(self, array, offset: tuple, *, rank: int = 0):
         """Queue one rank's chunk. The referenced data must stay unmodified
-        until flush() (openPMD contract)."""
-        a = np.asarray(array)
+        until flush() (openPMD contract). A jax.Array is kept on-device:
+        with `Series(device_compress=True)` the engine byte-shuffles it on
+        the accelerator at flush and the host only runs the LZ stage."""
+        from repro.core import compression as _C
+        a = array if _C.is_device_array(array) else np.asarray(array)
         if self._dtype is None:
             self.reset_dataset(a.dtype, a.shape)
         self._chunks.append((a, tuple(int(x) for x in offset), rank))
@@ -187,10 +201,16 @@ class Series:
                  meta: Optional[dict] = None, async_io: bool = False,
                  queue_depth: int = 2, parallel_io: int = 0,
                  parallel_read: int = 0, async_commit: bool = False,
-                 transport: str = "shm"):
+                 transport: str = "shm",
+                 device_compress: Optional[bool] = None):
         self.path = pathlib.Path(str(path))
         self.mode = mode
         self.n_ranks = n_ranks
+        if device_compress is not None:
+            # convenience spelling of EngineConfig(device_compress=...): the
+            # on-chip bitshuffle stage for jax.Array chunks
+            engine_config = dataclasses.replace(
+                engine_config, device_compress=bool(device_compress))
         self.engine_config = engine_config
         # read-side mirror of parallel_io: load_chunk/read_var fan
         # multi-chunk reads over a ReaderPool of this many workers
@@ -281,7 +301,7 @@ class Series:
             for rc in by_step[step]:
                 for arr, off, rank in rc._chunks:
                     w.put(rc._path, arr, global_shape=rc._global_extent,
-                          offset=off, rank=rank)
+                          offset=off, rank=rank, codec=rc.codec)
                 rc._chunks.clear()
             prof = w.end_step()
         self._dirty.clear()

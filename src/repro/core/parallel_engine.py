@@ -109,10 +109,11 @@ import numpy as np
 from repro.core import compression as C
 from repro.core.aggregation import SubfileSet, aggregator_of
 from repro.core.bp_engine import (ChunkMeta, EngineConfig, StepSnapshot,
-                                  build_md_record, chunk_stats,
+                                  build_md_record, encode_chunk,
+                                  record_compress_counters,
                                   seal_md_record, take_step_snapshot,
                                   validate_put_rank)
-from repro.core.darshan import MONITOR, merge_worker_payload, open_file
+from repro.core.darshan import CTR, MONITOR, merge_worker_payload, open_file
 from repro.core.dxt import TRACER
 from repro.core.metrics import METRICS, StepJournal, journal_path
 from repro.core.shm_transport import (DEFAULT_RING_BYTES, ShmHeader, ShmRing,
@@ -174,7 +175,12 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
     Protocol (every message is (tag, w, step, payload)):
       in:  ("open", None, (path, n_writers, cfg))  retarget at a new series
            ("step", step, items)  items = [(name, rank, offset, chunk), ...]
-                                  chunk = ndarray | ShmHeader
+                                  chunk = ndarray | ShmHeader; an optional
+                                  5th element is a meta dict: {"codec": spec}
+                                  overrides cfg.codec for that chunk, and
+                                  meta["pre"] marks chunk as the raw bytes
+                                  of a device-preconditioned (pre-shuffled)
+                                  array to rebuild as a PreshuffledChunk
            ("finish", None, None)  fsync + close files; worker stays alive
            ("close", None, None)   close files (if open) and exit
       out: ("ready", w, None, None)           files open / idle, accepting
@@ -312,20 +318,35 @@ def _worker_main(w: int, path_str, n_writers: int, cfg, task_q, result_q,
             shm_bytes = fallback_bytes = 0
             payloads, metas = [], []
             with TRACER.span("compress", path=f"data.{w}", rank=w) as csp:
-                for name, rank, offset, chunk in items:
+                for item in items:
+                    name, rank, offset, chunk = item[:4]
+                    meta = item[4] if len(item) > 4 else None
                     if isinstance(chunk, ShmHeader):
                         arr = ring.view(chunk)  # zero-copy: shared pages
                         shm_bytes += chunk.nbytes
                     else:
                         arr = chunk             # pickle path / spill
                         fallback_bytes += arr.nbytes
+                    codec = (meta or {}).get("codec") or cfg.codec
+                    pre = (meta or {}).get("pre")
+                    if pre is not None:
+                        # coordinator shuffled this chunk on-device and shipped
+                        # the raw shuffled bytes; rebuild the wrapper so
+                        # encode_chunk skips the host shuffle stage
+                        arr = C.PreshuffledChunk(
+                            np.ascontiguousarray(arr).view(np.uint8).reshape(-1),
+                            pre["dtype"], tuple(pre["shape"]), pre["block"],
+                            pre["vmin"], pre["vmax"])
+                    raw_nbytes = arr.nbytes
                     tc = time.perf_counter()
-                    payload = C.array_payload(arr, cfg.codec,
-                                              block=cfg.compression_block)
+                    payload, shape, stats, _ = encode_chunk(
+                        arr, codec, cfg.compression_block)
                     tcomp += time.perf_counter() - tc
+                    record_compress_counters(w, f"data.{w}", codec,
+                                             raw_nbytes, len(payload), None)
                     payloads.append(payload)
-                    metas.append((name, rank, offset, arr.shape, len(payload),
-                                  chunk_stats(arr)))
+                    metas.append((name, rank, offset, shape, len(payload),
+                                  stats))
                     del arr                     # release any shm view NOW
                 csp.length = sum(len(p) for p in payloads)
             if METRICS.enabled:
@@ -639,20 +660,36 @@ class ParallelBpWriter:
     def set_attribute(self, name: str, value):
         self._attrs[name] = value
 
-    def put(self, name: str, array: np.ndarray, *, global_shape: tuple,
-            offset: tuple, rank: int):
-        """Register one rank's chunk of variable `name` for this step."""
+    def put(self, name: str, array, *, global_shape: tuple,
+            offset: tuple, rank: int, codec: Optional[str] = None):
+        """Register one rank's chunk of variable `name` for this step.
+
+        Same contract as BpWriter.put: `array` may be a numpy ndarray, a
+        jax.Array (preconditioned on-device at commit when the engine has
+        `device_compress=True`), or a `PreshuffledChunk`; `codec` overrides
+        the engine codec for THIS variable."""
         if self._step is None:
             raise RuntimeError("put() outside begin/end_step")
         validate_put_rank(rank, self.n_ranks)
-        a = np.ascontiguousarray(array)
+        if isinstance(array, C.PreshuffledChunk) or C.is_device_array(array):
+            a = array                      # no host materialization here
+        else:
+            a = np.ascontiguousarray(array)
         gshape = tuple(int(x) for x in global_shape)
         var = self._pending.setdefault(name, {
-            "dtype": a.dtype.str, "shape": gshape, "chunks": []})
+            "dtype": np.dtype(a.dtype).str, "shape": gshape, "chunks": []})
         if var["shape"] != gshape:
             raise ValueError(
                 f"put({name!r}) global_shape {gshape} conflicts with "
                 f"{var['shape']} from an earlier put of this step")
+        if codec is not None:
+            C.parse_codec(codec)           # fail fast on bad specs
+            prev = var.get("codec")
+            if prev is not None and prev != codec:
+                raise ValueError(
+                    f"put({name!r}) codec {codec!r} conflicts with {prev!r} "
+                    f"from an earlier put of this step")
+            var["codec"] = codec
         var["chunks"].append((rank, tuple(int(x) for x in offset), a))
 
     def _take_snapshot(self, *, copy: bool) -> StepSnapshot:
@@ -707,10 +744,25 @@ class ParallelBpWriter:
         by_w: dict[int, list] = {}
         n_bytes_raw = 0
         for name, var in snap.pending.items():
+            codec = var.get("codec") or self.cfg.codec
             for rank, offset, arr in var["chunks"]:
+                if C.is_device_array(arr):
+                    if (self.cfg.device_compress
+                            and C.codec_wants_device(codec)):
+                        # on-chip byte shuffle BEFORE the shm handoff: the
+                        # worker sees pre-shuffled bytes and pays only the
+                        # LZ stage (its encode skips the host shuffle)
+                        arr = C.device_precondition(
+                            arr, block=self.cfg.compression_block)
+                        MONITOR.record(0, str(self.path),
+                                       CTR.COMPRESS_DEVICE_BYTES,
+                                       inc=float(arr.device_bytes))
+                    else:
+                        arr = np.asarray(arr)
                 n_bytes_raw += arr.nbytes
                 wid = aggregator_of(rank, self.n_ranks, self.m)
-                by_w.setdefault(wid, []).append((name, rank, offset, arr))
+                by_w.setdefault(wid, []).append((name, rank, offset, arr,
+                                                 codec))
 
         # ---- phase 1: PREPARE — fan chunks out, await sealed-shard votes.
         # shm transport: ONE memcpy into the worker's ring per chunk, only
@@ -726,18 +778,34 @@ class ParallelBpWriter:
                     wire_items = []
                     tw0 = time.perf_counter()
                     wid_bytes = 0
-                    for name, rank, offset, arr in items:
+                    for name, rank, offset, arr, codec in items:
+                        meta = None
+                        if isinstance(arr, C.PreshuffledChunk):
+                            # ship the shuffled bytes; the wrapper's metadata
+                            # rides the wire item so the worker can rebuild it
+                            meta = {"codec": codec,
+                                    "pre": {"dtype": arr.dtype.str,
+                                            "shape": arr.shape,
+                                            "block": arr.block,
+                                            "vmin": arr.vmin,
+                                            "vmax": arr.vmax}}
+                            arr = arr.data
+                        elif codec != self.cfg.codec:
+                            meta = {"codec": codec}
                         hdr = (ring.write_array(arr)
                                if ring is not None else None)
                         wid_bytes += arr.nbytes
                         if hdr is not None:
                             shm_slots.setdefault(wid, []).append(hdr.offset)
                             shm_bytes += arr.nbytes
-                            wire_items.append((name, rank, offset, hdr))
+                            sent = hdr
                         else:
                             if ring is not None:
                                 fallback_bytes += arr.nbytes
-                            wire_items.append((name, rank, offset, arr))
+                            sent = arr
+                        wire_items.append((name, rank, offset, sent, meta)
+                                          if meta is not None
+                                          else (name, rank, offset, sent))
                     self._workers[wid][1].put(("step", step, wire_items))
                     if METRICS.enabled:
                         # per-worker transport latency: the straggler axis

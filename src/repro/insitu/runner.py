@@ -17,6 +17,7 @@ equal `live` exactly — `assert_parity(live, posthoc)` is the guarantee.
 from __future__ import annotations
 
 import contextlib
+import math
 import threading
 from typing import Optional, Union
 
@@ -59,9 +60,14 @@ def reduce_posthoc(series: Union[str, BpReader], rset: ReducerSet,
     return rset.results()
 
 
-def assert_parity(live: dict, posthoc: dict, path: str = "results"):
-    """Exact (bitwise for arrays) equality of two reducer result trees;
-    raises AssertionError naming the first diverging leaf."""
+def assert_parity(live: dict, posthoc: dict, path: str = "results",
+                  atol: float = 0.0):
+    """Equality of two reducer result trees; raises AssertionError naming
+    the first diverging leaf. `atol=0` (default) demands exact, bitwise
+    equality for arrays. A positive `atol` is parity-within-bounds: the
+    contract when the teed series was stored through an error-bounded
+    lossy codec ("lossy:<bound>") — post-hoc replay then reconstructs
+    values within the codec bound, and so must every reduced scalar."""
     # explicit raises (not bare asserts): the documented AssertionError
     # contract must hold under `python -O` too
     if isinstance(live, dict) and isinstance(posthoc, dict):
@@ -69,13 +75,26 @@ def assert_parity(live: dict, posthoc: dict, path: str = "results"):
             raise AssertionError(
                 f"{path}: keys {sorted(live)} != {sorted(posthoc)}")
         for k in live:
-            assert_parity(live[k], posthoc[k], f"{path}/{k}")
+            assert_parity(live[k], posthoc[k], f"{path}/{k}", atol=atol)
         return
     if isinstance(live, np.ndarray) or isinstance(posthoc, np.ndarray):
         a, b = np.asarray(live), np.asarray(posthoc)
-        if not (a.dtype == b.dtype and a.shape == b.shape
-                and np.array_equal(a, b, equal_nan=True)):
+        if a.dtype != b.dtype or a.shape != b.shape:
             raise AssertionError(f"{path}: arrays differ")
+        if atol > 0.0 and a.dtype.kind == "f":
+            if not np.allclose(a, b, rtol=0.0, atol=atol, equal_nan=True):
+                err = float(np.nanmax(np.abs(
+                    a.astype(np.float64) - b.astype(np.float64))))
+                raise AssertionError(
+                    f"{path}: arrays differ by {err:g} > atol={atol:g}")
+        elif not np.array_equal(a, b, equal_nan=True):
+            raise AssertionError(f"{path}: arrays differ")
+        return
+    if atol > 0.0 and isinstance(live, float) and isinstance(posthoc, float):
+        if not (abs(live - posthoc) <= atol
+                or (math.isnan(live) and math.isnan(posthoc))):
+            raise AssertionError(
+                f"{path}: {live!r} != {posthoc!r} (atol={atol:g})")
         return
     if live != posthoc:
         raise AssertionError(f"{path}: {live!r} != {posthoc!r}")

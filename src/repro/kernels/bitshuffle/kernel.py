@@ -52,6 +52,25 @@ def byte_shuffle_tpu(data: jax.Array, *, itemsize: int,
 
 
 @functools.partial(jax.jit, static_argnames=("itemsize", "interpret"))
+def byte_shuffle_block(data: jax.Array, *, itemsize: int,
+                       interpret: bool = False) -> jax.Array:
+    """Whole-block shuffle: ONE grid point sized to the block, no padding
+    (requires n_bytes % itemsize == 0). JBPC codec blocks are <= 1 MiB, so
+    the int32-widened tile fits VMEM on current TPUs; a single grid point
+    also keeps interpret-mode execution to one kernel dispatch per codec
+    block instead of n/TILE_N — this is the shape the write-path
+    `DeviceCodec` pipeline calls per compression block."""
+    n = data.shape[0] // itemsize
+    x = data.reshape(n, itemsize)
+    out = pl.pallas_call(
+        _shuffle_kernel,
+        out_shape=jax.ShapeDtypeStruct((itemsize, n), jnp.uint8),
+        interpret=interpret,
+    )(x)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("itemsize", "interpret"))
 def byte_unshuffle_tpu(data: jax.Array, *, itemsize: int,
                        interpret: bool = False) -> jax.Array:
     n = data.shape[0] // itemsize

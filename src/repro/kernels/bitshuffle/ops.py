@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bitshuffle.kernel import (TILE_N, byte_shuffle_tpu,
+from repro.kernels.bitshuffle.kernel import (TILE_N, byte_shuffle_block,
+                                             byte_shuffle_tpu,
                                              byte_unshuffle_tpu)
 from repro.kernels.bitshuffle.ref import byte_shuffle_ref
 
@@ -31,6 +32,20 @@ def shuffle(data: jax.Array, *, itemsize: int,
     # the compression pipeline we keep the padded frame (header records n).
     out = byte_shuffle_tpu(x, itemsize=itemsize, interpret=interpret)
     return out, n
+
+
+def shuffle_block(data: jax.Array, *, itemsize: int,
+                  interpret: bool | None = None) -> jax.Array:
+    """Shuffle exactly one codec block on-device: uint8 [n] -> uint8 [n]
+    with n % itemsize == 0 and NO padding — output is bit-identical to the
+    host `compression.byte_shuffle` on the same bytes. One pallas grid
+    point per call (the per-codec-block shape the write path uses)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    if data.shape[0] % itemsize:
+        raise ValueError(
+            f"shuffle_block needs len % itemsize == 0, got "
+            f"{data.shape[0]} % {itemsize}")
+    return byte_shuffle_block(data, itemsize=itemsize, interpret=interpret)
 
 
 def unshuffle(data: jax.Array, n: int, *, itemsize: int,

@@ -167,7 +167,8 @@ def write_diagnostics_openpmd(series, state: PicState, cfg: PicConfig,
 
 def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
                            engine_config=None, queue_depth: int = 2,
-                           parallel_io: int = 0):
+                           parallel_io: int = 0,
+                           device_compress: bool = False):
     """Series for BIT1-style diagnostic output, async by default so dumps
     never stall the push/deposit loop.
 
@@ -177,18 +178,26 @@ def open_diagnostic_series(path, *, n_io_ranks: int = 8, async_io: bool = True,
     shared-memory rings), each dump committed by a two-phase commit. The
     async default COMPOSES with it — the commit runs behind a bounded
     snapshot queue (`async_commit`), so the push/deposit loop sees
-    neither compression nor commit latency."""
+    neither compression nor commit latency.
+
+    `device_compress=True` turns on the on-chip compression precondition:
+    jax.Array chunks stored on the series are byte-shuffled on the
+    accelerator (the Pallas bitshuffle kernel) before the host runs only
+    the cheap LZ stage."""
     from repro.core.bp_engine import EngineConfig
     from repro.core.openpmd import Series
     if engine_config is None:
         engine_config = EngineConfig(aggregators=min(4, n_io_ranks),
                                      codec="blosc")
+    dc = True if device_compress else None   # None: engine_config decides
     if parallel_io:
         return Series(path, "w", n_ranks=n_io_ranks,
                       engine_config=engine_config, parallel_io=parallel_io,
-                      async_commit=async_io, queue_depth=queue_depth)
+                      async_commit=async_io, queue_depth=queue_depth,
+                      device_compress=dc)
     return Series(path, "w", n_ranks=n_io_ranks, engine_config=engine_config,
-                  async_io=async_io, queue_depth=queue_depth)
+                  async_io=async_io, queue_depth=queue_depth,
+                  device_compress=dc)
 
 
 def run_with_diagnostics(state: PicState, cfg: PicConfig, series=None, *,

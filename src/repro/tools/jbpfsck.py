@@ -25,8 +25,17 @@ extents fit, and torn shard tails are cut back to their sealed prefix.
 `--trim` additionally drops orphaned payload bytes from plain subfiles.
 Repair never touches payload bytes of committed steps.
 
+`--deep` additionally walks every committed chunk's JBPC block headers
+(`compression.iter_block_headers`): magic, codec id (incl. the lossy id
+and its sub-header), flags (the pre-shuffled bit), and the length chain
+must tile the chunk's payload exactly, and the summed raw sizes must
+equal the chunk extent's dtype x shape byte count — all WITHOUT
+decompressing a single block. This is the only mode that reads payload
+bytes (headers of each block, via ranged reads through BpReader, so
+striped subfiles work too).
+
     PYTHONPATH=src python -m repro.tools.jbpfsck SERIES [--repair] [--trim]
-        [--json] [--io-report]
+        [--deep] [--json] [--io-report]
 
 Exit codes: 0 clean (or fully repaired), 1 issues found (or remain),
 2 not a JBP series.
@@ -212,6 +221,59 @@ def scan(path) -> dict:
             "_records": records, "_sizes": sizes, "_max_end": max_end}
 
 
+def deep_scan(path, report: dict) -> list[dict]:
+    """`--deep`: walk every committed chunk's JBPC block headers without
+    decompressing. Validates per block: magic, codec id (incl. lossy and
+    its sub-header length), known flag bits (the pre-shuffled bit), and
+    the length chain tiling the chunk payload exactly; per chunk: the
+    summed raw sizes must equal extent x dtype.itemsize. Ranged payload
+    reads go through BpReader, so striped subfiles work unchanged."""
+    import numpy as np
+
+    from repro.core import compression as C
+    from repro.core.bp_engine import BpReader
+    issues: list[dict] = []
+    known_flags = C.FLAG_PRESHUFFLED
+    with BpReader(path) as reader:
+        for step, _off, _ln, ok, _why, parsed in report["_records"]:
+            if not ok:
+                continue
+            for name, var in parsed.get("vars", {}).items():
+                itemsize = np.dtype(var["dtype"]).itemsize
+                for ch in var["chunks"]:
+                    where = (f"step {step} var {name!r} "
+                             f"data.{ch['agg']}[{ch['foff']}..]")
+                    try:
+                        payload = reader._read_payload(
+                            ch["agg"], ch["foff"], ch["nbytes"])
+                        blocks = list(C.iter_block_headers(payload))
+                    except C.CorruptPayloadError as e:
+                        issues.append({"kind": "corrupt-chunk", "step": step,
+                                       "var": name, "agg": ch["agg"],
+                                       "detail": f"{where}: {e}"})
+                        continue
+                    bad = None
+                    raw_sum = 0
+                    for boff, _cid, _isz, flags, raw, _comp in blocks:
+                        raw_sum += raw
+                        if flags & ~known_flags:
+                            bad = (f"{where}: block at {boff} carries "
+                                   f"unknown flag bits 0x{flags:02x}")
+                            break
+                    n_el = 1
+                    for s in ch["extent"]:
+                        n_el *= int(s)
+                    if bad is None and raw_sum != n_el * itemsize:
+                        bad = (f"{where}: blocks decode to {raw_sum} bytes, "
+                               f"extent {tuple(ch['extent'])} x "
+                               f"{var['dtype']} needs {n_el * itemsize}")
+                    if bad:
+                        issues.append({"kind": "corrupt-chunk", "step": step,
+                                       "var": name, "agg": ch["agg"],
+                                       "detail": bad})
+    return issues
+
+
 def repair(path, report: dict, *, trim: bool = False) -> list[str]:
     """Truncate/reseal to the last consistent step. Returns action log."""
     path = pathlib.Path(str(path))
@@ -270,6 +332,9 @@ def main(argv=None) -> int:
     ap.add_argument("--trim", action="store_true",
                     help="with --repair: drop orphaned payload bytes from "
                          "plain subfiles")
+    ap.add_argument("--deep", action="store_true",
+                    help="also walk every committed chunk's JBPC block "
+                         "headers (no decompression)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="machine-readable report")
     args = ap.parse_args(argv)
@@ -287,6 +352,10 @@ def main(argv=None) -> int:
     elif args.repair and args.trim:
         repaired = repair(args.series, report, trim=True)
         report = scan(args.series)
+    if args.deep:
+        # after any repair: deep-walk only what is (now) committed. Deep
+        # findings are payload damage repair cannot fix — report only.
+        report["issues"].extend(deep_scan(args.series, report))
 
     out = _public(report)
     out["repaired"] = repaired

@@ -142,3 +142,187 @@ def test_corruption_detected_under_python_O():
                          capture_output=True, text=True)
     assert out.returncode == 0, out.stderr
     assert out.stdout.strip() == "CAUGHT"
+
+
+# ------------------------------------------------------------- lossy codec
+
+@pytest.mark.parametrize("dtype", [np.float16, np.float32, np.float64])
+@pytest.mark.parametrize("spec,bound,rel", [
+    ("lossy:1e-3", 1e-3, False),
+    ("lossy:rel:1e-3", 1e-3, True),
+])
+def test_lossy_bound_holds_in_stored_dtype(dtype, spec, bound, rel):
+    rng = np.random.default_rng(3)
+    arr = (rng.normal(size=20_000) * 5).astype(dtype)
+    buf = C.array_payload(arr, spec, block=32 * 1024)
+    back = C.payload_to_array(buf, dtype, arr.shape)
+    eps = bound * np.max(np.abs(arr.astype(np.float64))) if rel else bound
+    err = np.max(np.abs(back.astype(np.float64) - arr.astype(np.float64)))
+    assert err <= eps, (err, eps)
+    if dtype is not np.float16:
+        # f16: a bound under the ulp floor legitimately falls back to a
+        # raw store (err == 0); wider floats must actually compress
+        assert len(buf) < arr.nbytes
+
+
+def test_lossy_beats_lossless_on_noise():
+    """The point of the lossy codec: random floats barely compress
+    losslessly but quantize-to-bound compresses well."""
+    rng = np.random.default_rng(4)
+    arr = rng.normal(size=100_000).astype(np.float32)
+    lossless = C.array_payload(arr, "blosc")
+    lossy = C.array_payload(arr, "lossy:1e-4")
+    assert len(lossy) < 0.8 * len(lossless), (len(lossy), len(lossless))
+
+
+def test_lossy_nonfinite_falls_back_lossless():
+    arr = np.array([1.0, np.nan, np.inf, -np.inf, 2.5], dtype=np.float32)
+    buf = C.array_payload(arr, "lossy:1e-3")
+    back = C.payload_to_array(buf, np.float32, arr.shape)
+    np.testing.assert_array_equal(back, arr)   # bitwise: fallback is lossless
+
+
+def test_lossy_integer_dtype_falls_back_lossless():
+    arr = np.arange(1000, dtype=np.int32)
+    buf = C.array_payload(arr, "lossy:1e-3")
+    np.testing.assert_array_equal(
+        C.payload_to_array(buf, np.int32, arr.shape), arr)
+
+
+def test_lossy_all_zero_rel_bound_falls_back():
+    arr = np.zeros(1000, dtype=np.float32)
+    buf = C.array_payload(arr, "lossy:rel:1e-3")
+    np.testing.assert_array_equal(
+        C.payload_to_array(buf, np.float32, arr.shape), arr)
+
+
+@pytest.mark.parametrize("spec", ["lossy", "lossy:", "lossy:0", "lossy:-1",
+                                  "lossy:nan", "lossy:rel:", "lossy:rel:0",
+                                  "bogus"])
+def test_bad_codec_specs_raise(spec):
+    with pytest.raises(ValueError):
+        C.parse_codec(spec)
+
+
+def test_corrupt_lossy_subheader_raises():
+    arr = np.random.default_rng(5).normal(size=5000).astype(np.float32)
+    buf = C.array_payload(arr, "lossy:1e-3")
+    hdr = C.HEADER.unpack_from(buf, 0)
+    assert hdr[1] == C.CODEC_IDS["lossy"]
+    # cut the block so even the lossy sub-header is gone
+    cut = buf[:C.HEADER.size + C.LOSSY_SUB.size - 1]
+    with pytest.raises(C.CorruptPayloadError):
+        C.decompress(cut)
+
+
+def test_corrupt_lossy_bad_qsize_raises():
+    arr = np.random.default_rng(6).normal(size=5000).astype(np.float32)
+    buf = bytearray(C.array_payload(arr, "lossy:1e-3"))
+    # LOSSY_SUB = <dB: qsize is the 9th byte after the block header
+    buf[C.HEADER.size + 8] = 3                 # not a valid int width
+    with pytest.raises(C.CorruptPayloadError):
+        C.decompress(bytes(buf))
+
+
+# ----------------------------------------------------- pre-shuffled blocks
+
+def test_preshuffled_payload_bit_identical_to_host():
+    """The device contract: a pre-shuffled encode produces the SAME bytes
+    as the host pipeline, so readers cannot tell the paths apart."""
+    rng = np.random.default_rng(7)
+    arr = np.cumsum(rng.normal(scale=1e-3, size=200_000)).astype(np.float32)
+    host = C.array_payload(arr, "blosc", block=64 * 1024)
+    shuffled = np.frombuffer(
+        b"".join(C.byte_shuffle(arr.tobytes()[i:i + 64 * 1024], 4)
+                 for i in range(0, arr.nbytes, 64 * 1024)),
+        dtype=np.uint8).copy()
+    chunk = C.PreshuffledChunk(shuffled, np.float32, arr.shape, 64 * 1024)
+    assert C.array_payload_preshuffled(chunk, "blosc") == host
+
+
+def test_preshuffled_raw_store_decodes():
+    """Incompressible pre-shuffled bytes are raw-stored WITH the flag —
+    decode must unshuffle them."""
+    rng = np.random.default_rng(8)
+    arr = rng.integers(0, 2**32, 4096, dtype=np.uint32)  # noise: raw store
+    shuffled = np.frombuffer(C.byte_shuffle(arr.tobytes(), 4),
+                             dtype=np.uint8).copy()
+    chunk = C.PreshuffledChunk(shuffled, np.uint32, arr.shape, C.DEFAULT_BLOCK)
+    buf = C.array_payload_preshuffled(chunk, "blosc")
+    hdr = C.HEADER.unpack_from(buf, 0)
+    assert hdr[1] == C.CODEC_IDS["none"] and hdr[3] & C.FLAG_PRESHUFFLED
+    np.testing.assert_array_equal(
+        C.payload_to_array(buf, np.uint32, arr.shape), arr)
+
+
+def test_corrupt_truncated_preshuffled_block_raises():
+    rng = np.random.default_rng(9)
+    arr = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+    shuffled = np.frombuffer(C.byte_shuffle(arr.tobytes(), 4),
+                             dtype=np.uint8).copy()
+    chunk = C.PreshuffledChunk(shuffled, np.uint32, arr.shape, C.DEFAULT_BLOCK)
+    buf = C.array_payload_preshuffled(chunk, "blosc")
+    with pytest.raises(C.CorruptPayloadError):
+        C.decompress(buf[:len(buf) - 7])
+
+
+def test_preshuffled_rejects_non_device_codec():
+    chunk = C.PreshuffledChunk(np.zeros(16, np.uint8), np.float32, (4,), 1024)
+    with pytest.raises(ValueError):
+        C.array_payload_preshuffled(chunk, "bzip2")
+
+
+def test_old_format_flags_zero_reads_bit_identical():
+    """Forward compat: payloads written before the flags field existed
+    (flags == 0 everywhere) decode unchanged."""
+    rng = np.random.default_rng(10)
+    arr = rng.normal(size=50_000).astype(np.float64)
+    buf = C.array_payload(arr, "blosc", block=64 * 1024)
+    for off, _cid, _isz, flags, _raw, _comp in C.iter_block_headers(buf):
+        assert flags == 0                      # host path writes no flags
+    np.testing.assert_array_equal(
+        C.payload_to_array(buf, np.float64, arr.shape), arr)
+
+
+# ------------------------------------------------- decompress scaling path
+
+def test_many_block_decompress_preallocates():
+    """The O(n^2) fix: decompress pre-scans headers and writes into one
+    preallocated buffer. Equality over many small blocks guards the path."""
+    data = bytes(range(256)) * 2048            # 512 KiB
+    buf = C.compress(data, "zlib", itemsize=1, block=1024)   # 512 blocks
+    assert C.decompress(buf) == data
+
+
+def test_payload_to_array_zero_copy_single_raw_block():
+    arr = np.random.default_rng(11).integers(0, 255, 4096, dtype=np.uint8)
+    buf = C.array_payload(arr, "none")
+    back = C.payload_to_array(buf, np.uint8, arr.shape)
+    np.testing.assert_array_equal(back, arr)
+    assert back.base is not None               # a view, not a copy
+    assert not back.flags.writeable            # of the (immutable) payload
+
+
+# -------------------------------------------------------- device pipeline
+
+def test_device_array_payload_matches_host():
+    jnp = pytest.importorskip("jax.numpy")
+    rng = np.random.default_rng(12)
+    arr = np.cumsum(rng.normal(scale=1e-3, size=300_000)).astype(np.float32)
+    host = C.array_payload(arr, "blosc", block=256 * 1024)
+    dev, stats = C.device_array_payload(jnp.asarray(arr), "blosc",
+                                        block=256 * 1024)
+    assert dev == host
+    assert stats.device_bytes == arr.nbytes
+
+
+def test_device_precondition_roundtrip_and_stats():
+    jnp = pytest.importorskip("jax.numpy")
+    rng = np.random.default_rng(13)
+    arr = rng.normal(size=(100, 700)).astype(np.float32)
+    chunk = C.device_precondition(jnp.asarray(arr), block=64 * 1024)
+    assert chunk.shape == arr.shape and chunk.dtype == np.float32
+    assert chunk.vmin == float(np.min(arr))
+    assert chunk.vmax == float(np.max(arr))
+    buf = C.array_payload_preshuffled(chunk, "blosc")
+    assert buf == C.array_payload(arr, "blosc", block=64 * 1024)

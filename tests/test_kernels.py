@@ -97,3 +97,52 @@ def test_deposit_conserves_charge():
     alive = jnp.ones((n,), jnp.float32)
     rho = dops.deposit(x, w, alive, n_cells=n_cells, dx=dx)
     assert abs(float(jnp.sum(rho) * dx) - n) / n < 1e-5
+
+@pytest.mark.parametrize("itemsize", [2, 4, 8])
+@pytest.mark.parametrize("n_items", [1, 7, 512, 16384, 65521])
+def test_bitshuffle_block_vs_numpy_oracle(itemsize, n_items):
+    """shuffle_block (whole-block, one grid point — the device compression
+    path) against the host numpy shuffle it must be bit-compatible with."""
+    from repro.core.compression import byte_shuffle
+    rng = np.random.default_rng(itemsize * 100 + n_items)
+    raw = rng.integers(0, 256, n_items * itemsize, dtype=np.uint8)
+    got = np.asarray(bops.shuffle_block(jnp.asarray(raw), itemsize=itemsize))
+    oracle = np.frombuffer(byte_shuffle(raw.tobytes(), itemsize), np.uint8)
+    np.testing.assert_array_equal(got, oracle)
+
+
+def test_bitshuffle_block_rejects_ragged_length():
+    with pytest.raises(ValueError):
+        bops.shuffle_block(jnp.zeros(10, jnp.uint8), itemsize=4)
+
+
+def test_bitshuffle_block_property_dtype_views():
+    """Property sweep: for real dtype arrays (as the write path sees them),
+    device shuffle of the byte view == numpy oracle, odd lengths included."""
+    from repro.core.compression import byte_shuffle
+    rng = np.random.default_rng(99)
+    for dtype in (np.float16, np.float32, np.float64, np.int32, np.uint64):
+        for n in (3, 100, 1000, 4097):
+            arr = rng.normal(size=n) * 100
+            arr = arr.astype(dtype)
+            raw = arr.view(np.uint8).reshape(-1)
+            got = np.asarray(bops.shuffle_block(
+                jnp.asarray(raw), itemsize=arr.dtype.itemsize))
+            oracle = np.frombuffer(
+                byte_shuffle(raw.tobytes(), arr.dtype.itemsize), np.uint8)
+            np.testing.assert_array_equal(got, oracle, err_msg=f"{dtype} {n}")
+
+
+def test_device_precondition_matches_host_per_block():
+    """Block boundaries fixed at precondition time must mirror the host
+    encoder: a block whose length is not a multiple of itemsize passes
+    through UNshuffled on both sides."""
+    from repro.core import compression as C
+    rng = np.random.default_rng(5)
+    arr = rng.normal(size=1001).astype(np.float32)      # 4004 bytes
+    block = 999                                         # 999 % 4 != 0
+    chunk = C.device_precondition(jnp.asarray(arr), block=block)
+    host = b"".join(
+        C.byte_shuffle(arr.tobytes()[i:i + block], 4)
+        for i in range(0, arr.nbytes, block))
+    assert chunk.data.tobytes() == host
